@@ -1,0 +1,56 @@
+"""Shared benchmark plumbing: datasets, timing, CSV contract."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import blocks
+from repro.data import synthetic
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+_DATASETS: Dict[str, synthetic.SyntheticSpec] = {
+    # name -> spec; sizes chosen for a single CPU core (paper: 1M-530M on a
+    # 100-node Spark cluster — scaling bench extrapolates the complexity)
+    "SYN10K": synthetic.SyntheticSpec(num_entities=4_000, seed=1),
+    "SYN30K": synthetic.SyntheticSpec(num_entities=12_000, seed=2),
+    "SYN100K": synthetic.SyntheticSpec(num_entities=40_000, seed=3),
+    "SYN300K": synthetic.SyntheticSpec(num_entities=120_000, seed=4),
+    "SYN1M": synthetic.SyntheticSpec(num_entities=400_000, seed=5),
+    # VOTER-analog: more columns, scalar-heavy, complete ground truth
+    "VOTERSYN": synthetic.SyntheticSpec(
+        num_entities=20_000, dup_rate=0.15, max_dups=2, name_len=(2, 4),
+        desc_len=(4, 8), brand_card=50_000, category_card=2_000,
+        model_no_present=0.9, tok_dropout=0.08, tok_substitute=0.05, seed=6),
+}
+
+_cache: Dict[str, object] = {}
+
+
+def get_corpus(name: str) -> synthetic.Corpus:
+    if name not in _cache:
+        _cache[name] = synthetic.generate(_DATASETS[name])
+    return _cache[name]
+
+
+def get_keys(name: str):
+    key = name + "/keys"
+    if key not in _cache:
+        c = get_corpus(name)
+        _cache[key] = blocks.build_keys(c.columns, c.blocking)
+    return _cache[key]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Benchmark output contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

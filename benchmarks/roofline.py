@@ -1,0 +1,92 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+Emits a markdown table (also pasted into EXPERIMENTS.md) with the three
+terms, the dominant bound, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and
+memory-fit per chip.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+HBM_PER_CHIP = 16e9  # v5e-class
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N_active*D for train (fwd+bwd); 2*N_active*D for inference.
+
+    enc-dec: the encoder runs over seq_len frames while the decoder sees
+    seq_len/ratio tokens — count the two halves separately.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_params()
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    if cfg.family == "encdec":
+        n_enc = n * cfg.encoder_layers / (cfg.encoder_layers + cfg.decoder_layers)
+        n_dec = n - n_enc
+        dec_tokens = (shape.seq_len // cfg.encoder_seq_ratio
+                      if shape.kind != "decode" else 1)
+        enc_tokens = shape.seq_len if shape.kind != "decode" else 0
+        return mult * (n_enc * enc_tokens + n_dec * dec_tokens) * shape.global_batch
+    tokens = shape.seq_len if shape.kind != "decode" else 1
+    return mult * n * tokens * shape.global_batch
+
+
+def load(dir_: str, tag: str = "baseline", mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}__{tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows, mesh="single"):
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound | "
+           "MODEL/HLO flops | HBM GB/chip | note |")
+    lines = [hdr, "|" + "---|" * 9]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | FAIL | - | - | {r.get('error','')[:40]} |")
+            continue
+        roof = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = roof["flops_per_device"] * roof["chips"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        mem = r["memory"]
+        hbm = (mem.get("argument_size_in_bytes") or 0) / roof["chips"] \
+            + (mem.get("temp_size_in_bytes") or 0)
+        # argument_size is already per-device on SPMD CPU? record raw temp
+        hbm_gb = ((mem.get("temp_size_in_bytes") or 0)
+                  + (mem.get("argument_size_in_bytes") or 0)) / 1e9
+        fits = "fits" if hbm_gb < HBM_PER_CHIP / 1e9 else "OVER"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute_seconds']:.3g} "
+            f"| {roof['memory_seconds']:.3g} | {roof['collective_seconds']:.3g} "
+            f"| {roof['dominant']} | {ratio:.2f} | {hbm_gb:.1f} ({fits}) | |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load(args.dir, args.tag, args.mesh)
+    print(table(rows, args.mesh))
+    ok = sum(1 for r in rows if r.get("ok"))
+    print(f"\n{ok}/{len(rows)} cells OK ({args.mesh} mesh, tag={args.tag})")
+
+
+if __name__ == "__main__":
+    main()

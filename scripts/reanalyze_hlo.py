@@ -1,0 +1,38 @@
+"""Re-run the HLO cost model over saved .hlo.gz artifacts and refresh the
+roofline fields of the matching results/dryrun/*.json (no recompilation).
+
+Usage: PYTHONPATH=src python scripts/reanalyze_hlo.py [hlo_dir] [json_dir]
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.hlo_analysis import analyze
+
+hlo_dir = sys.argv[1] if len(sys.argv) > 1 else "results/hlo"
+json_dir = sys.argv[2] if len(sys.argv) > 2 else "results/dryrun"
+
+for path in sorted(glob.glob(os.path.join(hlo_dir, "*.hlo.gz"))):
+    stem = os.path.basename(path)[: -len(".hlo.gz")]
+    jpath = os.path.join(json_dir, stem + ".json")
+    if not os.path.exists(jpath):
+        print(f"[skip] no json for {stem}")
+        continue
+    with open(jpath) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        continue
+    with gzip.open(path, "rt") as f:
+        text = f.read()
+    roof, cost = analyze(text, rec["chips"])
+    rec["roofline"] = roof.as_dict()
+    rec["collectives"] = {"bytes": cost.coll_by_kind, "count": cost.coll_count}
+    with open(jpath, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[ok] {stem}: {roof.dominant} "
+          f"{roof.compute_seconds:.3g}/{roof.memory_seconds:.3g}/"
+          f"{roof.collective_seconds:.3g}s")

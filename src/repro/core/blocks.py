@@ -1,0 +1,137 @@
+"""Top-level block building (paper §2): Identity / Token / LSH builders.
+
+A corpus column is a padded token matrix ``(N, T)`` uint32 + mask. Each
+builder maps a column to u64 blocking keys per record:
+
+- identity: one key = hash of the whole (normalized) value, namespaced by
+  the column id — "foo" in two columns gives two different keys.
+- token: one key per token, NOT namespaced by column (schema-agnostic
+  Token Blocking of Papadakis et al., used for the DBPEDIA/FREEB-style
+  runs in the paper).
+- lsh(b, w): b band keys from b*w MinHashes, namespaced by column.
+
+``build_keys`` concatenates all columns' keys into the dense per-record
+key matrix that seeds Hashed Dynamic Blocking, deduplicating keys within
+each record (set semantics, as in the paper's Spark implementation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import u64, hashing, minhash
+from .u64 import U64
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenColumn:
+    """Padded token-hash matrix for one attribute."""
+
+    tokens: jnp.ndarray  # (N, T) uint32
+    mask: jnp.ndarray    # (N, T) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnBlocking:
+    """How to build blocking keys for one column."""
+
+    kind: str  # "identity" | "token" | "lsh"
+    bands: int = 0
+    rows_per_band: int = 0
+
+    @staticmethod
+    def identity() -> "ColumnBlocking":
+        return ColumnBlocking("identity")
+
+    @staticmethod
+    def token() -> "ColumnBlocking":
+        return ColumnBlocking("token")
+
+    @staticmethod
+    def lsh(bands: int, rows_per_band: int) -> "ColumnBlocking":
+        return ColumnBlocking("lsh", bands=bands, rows_per_band=rows_per_band)
+
+    def num_keys(self, column_width: int) -> int:
+        if self.kind == "identity":
+            return 1
+        if self.kind == "token":
+            return column_width
+        if self.kind == "lsh":
+            return self.bands
+        raise ValueError(self.kind)
+
+
+def identity_keys(col: TokenColumn, column_seed: int) -> Tuple[U64, jnp.ndarray]:
+    """One key per record: sponge over the column's (ordered) tokens."""
+    n, t = col.tokens.shape
+    h = hashing.hash_u64(u64.full((n,), t), seed=0x1DE0 + column_seed)
+    for k in range(t):  # static width
+        tok = u64.from_u32(jnp.where(col.mask[:, k], col.tokens[:, k], 0))
+        # include the mask bit so "padding" differs from a real 0 token
+        tok = u64.add(tok, u64.from_u32(col.mask[:, k].astype(jnp.uint32) << 31))
+        h = hashing.mix64(u64.add(u64.xor(h, tok), u64.from_int(0x9E3779B97F4A7C15)))
+    valid = jnp.any(col.mask, axis=1)
+    return (h[0][:, None], h[1][:, None]), valid[:, None]
+
+
+def token_keys(col: TokenColumn, _: int) -> Tuple[U64, jnp.ndarray]:
+    """One key per token, shared across columns (schema-agnostic)."""
+    keys = hashing.hash_u32(col.tokens, seed=0x70CE)
+    return keys, col.mask
+
+
+def build_keys(
+    columns: Dict[str, TokenColumn],
+    blocking: Dict[str, ColumnBlocking],
+    max_width: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the dense per-record top-level key matrix.
+
+    Returns:
+      keys:  (N, K, 2) uint32 packed u64 keys (sentinel-padded)
+      valid: (N, K) bool
+    K = sum over columns of keys-per-column (possibly truncated to
+    max_width, keeping column order).
+    """
+    all_hi, all_lo, all_valid = [], [], []
+    for seed, name in enumerate(sorted(columns)):
+        col = columns[name]
+        spec = blocking[name]
+        if spec.kind == "identity":
+            (hi, lo), valid = identity_keys(col, seed)
+        elif spec.kind == "token":
+            (hi, lo), valid = token_keys(col, seed)
+        elif spec.kind == "lsh":
+            (hi, lo), valid = minhash.lsh_keys(
+                col.tokens, col.mask, spec.bands, spec.rows_per_band, column_seed=seed)
+        else:
+            raise ValueError(spec.kind)
+        all_hi.append(hi)
+        all_lo.append(lo)
+        all_valid.append(valid)
+    hi = jnp.concatenate(all_hi, axis=1)
+    lo = jnp.concatenate(all_lo, axis=1)
+    valid = jnp.concatenate(all_valid, axis=1)
+    if max_width is not None and hi.shape[1] > max_width:
+        hi, lo, valid = hi[:, :max_width], lo[:, :max_width], valid[:, :max_width]
+    hi, lo, valid = dedupe_row_keys(hi, lo, valid)
+    return jnp.stack([hi, lo], axis=-1), valid
+
+
+def dedupe_row_keys(hi: jnp.ndarray, lo: jnp.ndarray, valid: jnp.ndarray):
+    """Enforce per-record set semantics: drop duplicate keys within a row.
+
+    Sorts each row (invalid -> sentinel -> tail) and masks repeats. Row
+    order is not meaningful afterwards.
+    """
+    hi = jnp.where(valid, hi, jnp.uint32(0xFFFFFFFF))
+    lo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
+    hi, lo = jax.lax.sort((hi, lo), num_keys=2, dimension=1)
+    same_as_prev = jnp.concatenate(
+        [jnp.zeros((hi.shape[0], 1), bool),
+         (hi[:, 1:] == hi[:, :-1]) & (lo[:, 1:] == lo[:, :-1])], axis=1)
+    valid = ~same_as_prev & ~((hi == jnp.uint32(0xFFFFFFFF)) & (lo == jnp.uint32(0xFFFFFFFF)))
+    return hi, lo, valid

@@ -1,0 +1,296 @@
+"""Distributed HDB: the paper's Spark dataflow mapped onto a TPU pod mesh.
+
+Sharding: records (and their key rows) are sharded over the mesh's
+data-like axes; the model axis of the production mesh simply joins the
+record sharding (blocking has no "model" dimension). Per iteration:
+
+  - CMS:     built per shard, merged with ONE psum (linear sketch).
+  - Exact:   surviving entries hash-route to an owner shard with ONE
+             all_to_all; owner computes exact counts + XOR membership
+             fingerprints with a local sort (keys are fully local after
+             routing).
+  - Dedupe:  block representatives hash-route BY FINGERPRINT with a second
+             (much smaller) all_to_all; survivors are all-gathered as the
+             paper's "broadcasted counts map"; a Bloom filter over ALL
+             over-sized keys is OR-merged so shards can recover
+             CMS-over-counted right-sized blocks exactly as in Algorithm 4
+             (key not in Bloom => right-sized; in counts map => over-sized;
+             otherwise duplicate, dropped).
+  - Intersect: purely record-local (Alg. 2), no communication.
+
+Record payloads never move; the only shuffled bytes are 8-byte key hashes
+and int32 sizes of the *shrinking* survivor set — the paper's minimal-
+data-movement thesis, with fixed-capacity buffers instead of dynamic
+shuffles (capacity overflows are counted, never silent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import hashing, segments, sketches, u64
+from .hdb import (BlockingResult, HDBConfig, INT32_MAX, IterationStats,
+                  intersect_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Fixed buffer capacities for the distributed exchanges."""
+
+    route_slack: float = 2.0       # all_to_all bucket slack over the mean
+    rep_capacity_per_shard: int = 1 << 14
+    bloom_slots: int = 1 << 22
+    bloom_hashes: int = 20
+
+
+def _linear_shard_index(axis_names: Sequence[str]) -> jnp.ndarray:
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def _route(khi, klo, payloads, owner, n_shards: int, cap: int):
+    """Scatter entries into per-destination buckets and all_to_all them.
+
+    Args:
+      owner: int32 destination shard per entry; use n_shards for "drop".
+    Returns routed (khi, klo, payloads, overflow_count); absent slots carry
+    sentinel keys.
+    """
+    # rank within destination group via sort by owner
+    n = owner.shape[0]
+    order = jnp.argsort(owner)  # stable not required; ranks only need uniqueness
+    owner_s = owner[order]
+    start = jnp.searchsorted(owner_s, owner, side="left")
+    # rank of each (unsorted) entry: position among same-owner entries
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.searchsorted(
+        owner_s, owner_s, side="left").astype(jnp.int32)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    del start
+    pos = owner * cap + rank
+    ok = (owner < n_shards) & (rank < cap)
+    overflow = jnp.sum(((owner < n_shards) & (rank >= cap)).astype(jnp.int32))
+    flat_pos = jnp.where(ok, pos, n_shards * cap)  # OOB -> dropped
+
+    def scatter(x, fill):
+        buf = jnp.full((n_shards * cap,), fill, x.dtype)
+        return buf.at[flat_pos].set(x, mode="drop").reshape(n_shards, cap)
+
+    bhi = scatter(khi, jnp.uint32(0xFFFFFFFF))
+    blo = scatter(klo, jnp.uint32(0xFFFFFFFF))
+    bpl = [scatter(p, jnp.asarray(0, p.dtype)) for p in payloads]
+    return bhi, blo, bpl, overflow
+
+
+def make_hdb_step(cfg: HDBConfig, mesh: Mesh,
+                  axis_names: Sequence[str],
+                  dist: DistConfig = DistConfig()):
+    """Build the jitted, shard_mapped distributed HDB iteration."""
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    axes = tuple(axis_names)
+    bloom_cfg = sketches.BloomConfig(dist.bloom_slots, dist.bloom_hashes)
+
+    def local_step(keys_packed, valid, psize):
+        n_loc, k = valid.shape
+        shard = _linear_shard_index(axes)
+        rid0 = shard * jnp.int32(n_loc)
+        key = (keys_packed[..., 0], keys_packed[..., 1])
+
+        # ---- rough over-size detection (Alg. 3), CMS merged via psum ----
+        flat_key = (key[0].reshape(-1), key[1].reshape(-1))
+        flat_valid = valid.reshape(-1)
+        cms = sketches.cms_build(cfg.cms, flat_key, flat_valid)
+        cms = jax.lax.psum(cms, axes)
+        s = sketches.cms_query(cfg.cms, cms, flat_key).reshape(valid.shape)
+        right_cms = valid & (s <= cfg.max_block_size)
+        progress = s.astype(jnp.float32) <= cfg.max_similarity * psize.astype(jnp.float32)
+        keep = valid & ~right_cms & progress
+        dropped_sim = valid & ~right_cms & ~progress
+
+        # ---- exact count: route surviving entries to key-owner shards ----
+        L = n_loc * k
+        flat_keep = keep.reshape(-1)
+        khi = jnp.where(flat_keep, flat_key[0], jnp.uint32(0xFFFFFFFF))
+        klo = jnp.where(flat_keep, flat_key[1], jnp.uint32(0xFFFFFFFF))
+        rid = rid0 + jnp.broadcast_to(
+            jnp.arange(n_loc, dtype=jnp.int32)[:, None], (n_loc, k)).reshape(-1)
+        _, owner_h = hashing.hash_u64((khi, klo), seed=0xA110)
+        owner = jnp.where(flat_keep,
+                          (owner_h % jnp.uint32(n_shards)).astype(jnp.int32),
+                          jnp.int32(n_shards))
+        cap = int(np.ceil(L / n_shards * dist.route_slack))
+        bhi, blo, (brid,), route_overflow = _route(khi, klo, [rid], owner, n_shards, cap)
+        bhi = jax.lax.all_to_all(bhi, axes, 0, 0, tiled=True)
+        blo = jax.lax.all_to_all(blo, axes, 0, 0, tiled=True)
+        brid = jax.lax.all_to_all(brid, axes, 0, 0, tiled=True)
+
+        # ---- owner-side exact counts + fingerprints (local sort) ----
+        fhi, flo, frid = bhi.reshape(-1), blo.reshape(-1), brid.reshape(-1)
+        (shi, slo), (srid,) = segments.sort_by_key((fhi, flo), [frid])
+        skey = (shi, slo)
+        live = ~u64.is_sentinel(skey)
+        sizes = segments.segment_counts(skey)
+        fp = hashing.fingerprint_rid(srid)
+        fp = (jnp.where(live, fp[0], 0), jnp.where(live, fp[1], 0))
+        xors = segments.segment_xor(skey, fp)
+        over = live & (sizes > cfg.max_block_size)
+        reps = segments.segment_starts(skey) & over
+
+        # Bloom over ALL over-sized keys (H_O), OR-merged across shards
+        bloom = sketches.bloom_build(bloom_cfg, skey, reps)
+        bloom = jax.lax.pmax(bloom, axes)
+
+        # ---- dedupe: route representatives by membership fingerprint ----
+        rcap = dist.rep_capacity_per_shard
+        n_reps = jnp.sum(reps.astype(jnp.int32))
+        rep_overflow = jnp.maximum(n_reps - rcap, 0)
+        rep_idx = jnp.nonzero(reps, size=rcap, fill_value=skey[0].shape[0] - 1)[0]
+        rep_ok = jnp.arange(rcap, dtype=jnp.int32) < n_reps
+        r_khi = jnp.where(rep_ok, shi[rep_idx], jnp.uint32(0xFFFFFFFF))
+        r_klo = jnp.where(rep_ok, slo[rep_idx], jnp.uint32(0xFFFFFFFF))
+        r_xhi = jnp.where(rep_ok, xors[0][rep_idx], jnp.uint32(0xFFFFFFFF))
+        r_xlo = jnp.where(rep_ok, xors[1][rep_idx], jnp.uint32(0xFFFFFFFF))
+        r_sz = jnp.where(rep_ok, sizes[rep_idx], INT32_MAX)
+        _, xo = hashing.hash_u64((r_xhi, r_xlo), seed=0xDED0)
+        xowner = jnp.where(rep_ok, (xo % jnp.uint32(n_shards)).astype(jnp.int32),
+                           jnp.int32(n_shards))
+        xcap = int(np.ceil(rcap / n_shards * dist.route_slack)) + 8
+        r_live = rep_ok.astype(jnp.int32)
+        xhi_b, xlo_b, (xsz_b, xkhi_b, xklo_b, xlive_b), x_overflow = _route(
+            r_xhi, r_xlo, [r_sz, r_khi, r_klo, r_live], xowner, n_shards, xcap)
+        xhi_b = jax.lax.all_to_all(xhi_b, axes, 0, 0, tiled=True)
+        xlo_b = jax.lax.all_to_all(xlo_b, axes, 0, 0, tiled=True)
+        xsz_b = jax.lax.all_to_all(xsz_b, axes, 0, 0, tiled=True)
+        xkhi_b = jax.lax.all_to_all(xkhi_b, axes, 0, 0, tiled=True)
+        xklo_b = jax.lax.all_to_all(xklo_b, axes, 0, 0, tiled=True)
+        xlive_b = jax.lax.all_to_all(xlive_b, axes, 0, 0, tiled=True)
+        g_xhi, g_xlo, g_sz, g_khi, g_klo, g_live = jax.lax.sort(
+            (xhi_b.reshape(-1), xlo_b.reshape(-1), xsz_b.reshape(-1),
+             xkhi_b.reshape(-1), xklo_b.reshape(-1), xlive_b.reshape(-1)),
+            num_keys=5)
+        dup = ((g_xhi == jnp.roll(g_xhi, 1)) & (g_xlo == jnp.roll(g_xlo, 1))
+               & (g_sz == jnp.roll(g_sz, 1)))
+        dup = dup.at[0].set(False)
+        is_real = g_live > 0
+        survivor = is_real & ~dup
+        n_dup = jnp.sum((is_real & dup).astype(jnp.int32))
+        n_dup = jax.lax.psum(n_dup, axes)
+
+        # ---- broadcast the survivor counts map (all_gather + sort) ----
+        t_khi = jnp.where(survivor, g_khi, jnp.uint32(0xFFFFFFFF))
+        t_klo = jnp.where(survivor, g_klo, jnp.uint32(0xFFFFFFFF))
+        t_sz = jnp.where(survivor, g_sz, 0)
+        t_khi = jax.lax.all_gather(t_khi, axes, tiled=True)
+        t_klo = jax.lax.all_gather(t_klo, axes, tiled=True)
+        t_sz = jax.lax.all_gather(t_sz, axes, tiled=True)
+        t_khi, t_klo, t_sz = jax.lax.sort((t_khi, t_klo, t_sz), num_keys=2)
+
+        # ---- classify original local entries (paper Alg. 4 lines 9-19) ----
+        in_bloom = sketches.bloom_query(bloom_cfg, bloom, (khi, klo)).reshape(valid.shape)
+        hit, ex_size = segments.lookup_u64((t_khi, t_klo), t_sz, (khi, klo), 0)
+        hit = hit.reshape(valid.shape)
+        ex_size = ex_size.reshape(valid.shape)
+        right_exact = keep & ~in_bloom
+        survive = keep & hit
+        accepted = right_cms | right_exact
+
+        # ---- intersect locally (Alg. 2) ----
+        new_key, new_valid, new_psize, n_dropped_mk = intersect_keys(
+            cfg, key, survive, ex_size)
+
+        def tot(x):
+            return jax.lax.psum(jnp.sum(x.astype(jnp.int32)), axes)
+
+        stats = {
+            "n_live_keys": tot(valid),
+            "n_right_cms": tot(right_cms),
+            "n_right_exact": tot(right_exact),
+            "n_dropped_similarity": tot(dropped_sim),
+            "n_dropped_max_keys": jax.lax.psum(n_dropped_mk, axes),
+            "n_duplicate_blocks": n_dup,
+            "n_surviving_oversized": jax.lax.psum(
+                jnp.sum(survivor.astype(jnp.int32)), axes),
+            "n_surviving_entries": tot(survive),
+            "rep_overflow": jax.lax.psum(rep_overflow + route_overflow
+                                         + x_overflow, axes),
+        }
+        new_packed = jnp.stack([new_key[0], new_key[1]], axis=-1)
+        return accepted, new_packed, new_valid, new_psize, stats
+
+    spec3 = P(axes, None, None)
+    spec2 = P(axes, None)
+    stats_spec = {k: P() for k in [
+        "n_live_keys", "n_right_cms", "n_right_exact", "n_dropped_similarity",
+        "n_dropped_max_keys", "n_duplicate_blocks", "n_surviving_oversized",
+        "n_surviving_entries", "rep_overflow"]}
+    mapped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(spec3, spec2, spec2),
+        out_specs=(spec2, spec3, spec2, spec2, stats_spec),
+        check_rep=False)
+    return jax.jit(mapped)
+
+
+def distributed_hashed_dynamic_blocking(
+    keys_packed, valid, cfg: HDBConfig, mesh: Mesh,
+    axis_names: Sequence[str] = ("data",),
+    dist: DistConfig = DistConfig(),
+    checkpoint_cb=None,
+    start_iteration: int = 0,
+    verbose: bool = False,
+) -> BlockingResult:
+    """Multi-device HDB driver (Algorithm 1) over a shard_mapped step.
+
+    ``checkpoint_cb(iteration, state_pytree)`` — optional fault-tolerance
+    hook invoked after every iteration with the (sharded) live state.
+    """
+    n = valid.shape[0]
+    axes = tuple(axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n % n_shards == 0, (n, n_shards)
+    sharding3 = NamedSharding(mesh, P(axes, None, None))
+    sharding2 = NamedSharding(mesh, P(axes, None))
+    keys_packed = jax.device_put(keys_packed, sharding3)
+    valid = jax.device_put(valid, sharding2)
+    psize = jax.device_put(jnp.full(valid.shape, INT32_MAX, jnp.int32), sharding2)
+
+    step = make_hdb_step(cfg, mesh, axes, dist)
+    acc_rid: List[np.ndarray] = []
+    acc_hi: List[np.ndarray] = []
+    acc_lo: List[np.ndarray] = []
+    all_stats: List[IterationStats] = []
+    for it in range(start_iteration, cfg.max_iterations):
+        accepted, new_keys, new_valid, new_psize, stats = step(keys_packed, valid, psize)
+        acc = np.asarray(accepted)
+        ridx, kidx = np.nonzero(acc)
+        keys_np = np.asarray(keys_packed)
+        acc_rid.append(ridx.astype(np.int64))
+        acc_hi.append(keys_np[ridx, kidx, 0])
+        acc_lo.append(keys_np[ridx, kidx, 1])
+        st = IterationStats(iteration=it, **{k: int(v) for k, v in stats.items()})
+        all_stats.append(st)
+        if verbose:
+            print(f"[hdb-dist] iter={it} {st}")
+        if st.rep_overflow:
+            print(f"[hdb-dist] WARNING: buffer overflow ({st.rep_overflow} "
+                  "entries dropped); raise DistConfig capacities")
+        keys_packed, valid, psize = new_keys, new_valid, new_psize
+        if checkpoint_cb is not None:
+            checkpoint_cb(it, {"keys": keys_packed, "valid": valid, "psize": psize})
+        if st.n_surviving_entries == 0:
+            break
+    return BlockingResult(
+        rids=np.concatenate(acc_rid) if acc_rid else np.zeros((0,), np.int64),
+        key_hi=np.concatenate(acc_hi) if acc_hi else np.zeros((0,), np.uint32),
+        key_lo=np.concatenate(acc_lo) if acc_lo else np.zeros((0,), np.uint32),
+        stats=all_stats,
+        num_records=n,
+    )

@@ -1,0 +1,118 @@
+"""Hash mixing for blocking keys, built on the u64 limb library.
+
+The paper (§3.1) represents blocking keys as 128-bit murmur3 hashes and
+record IDs as 64-bit longs, and combines keys during intersection with
+``MURMUR3(key_i, key_j)``. We use the splitmix64 finalizer family (Steele
+et al.) — the same avalanche quality class — on 64-bit values held as
+uint32 limb pairs (see DESIGN.md §6 for the width rationale).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import u64
+from .u64 import U64
+
+# splitmix64 constants
+_GAMMA = 0x9E3779B97F4A7C15
+_M1 = 0xBF58476D1CE4E5B9
+_M2 = 0x94D049BB133111EB
+
+
+def mix64(x: U64) -> U64:
+    """splitmix64 finalizer: full-avalanche bijective mixer on u64."""
+    x = u64.xor(x, u64.shr(x, 30))
+    x = u64.mul_const(x, _M1)
+    x = u64.xor(x, u64.shr(x, 27))
+    x = u64.mul_const(x, _M2)
+    x = u64.xor(x, u64.shr(x, 31))
+    return x
+
+
+def hash_u64(x: U64, seed: int = 0) -> U64:
+    """Seeded hash of a u64 value: mix(x + (seed+1)*gamma)."""
+    return mix64(u64.add(x, u64.from_int((seed + 1) * _GAMMA)))
+
+
+def hash_u32(x: jnp.ndarray, seed: int = 0) -> U64:
+    """Seeded 64-bit hash of a uint32 array."""
+    return hash_u64(u64.from_u32(x), seed)
+
+
+def combine(a: U64, b: U64) -> U64:
+    """Order-sensitive combine of two keys into a new key.
+
+    Used for Algorithm 2 line 7 (intersection key = hash of the two parent
+    keys). Both operands pass through the mixer so chains of intersections
+    stay well distributed. Callers canonicalize order (a < b) so that
+    combine(a,b) is the same key for the same unordered parent pair.
+    """
+    h = u64.xor(mix64(a), u64.rotl(b, 29))
+    h = u64.add(h, u64.from_int(_GAMMA))
+    return mix64(h)
+
+
+def fingerprint_rid(rid: jnp.ndarray) -> U64:
+    """64-bit membership fingerprint of a record id (uint32/int32 array).
+
+    XOR-accumulated per block to form the paper's block-membership hash
+    (Algorithm 4 line 4): since XOR is commutative/associative the result
+    is independent of record order and computable with a segmented XOR.
+    """
+    return hash_u32(rid.astype(jnp.uint32), seed=0xB10C)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror (host-side tokenization / test oracles)
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+
+
+def np_mix64(x: int) -> int:
+    x &= _MASK64
+    x ^= x >> 30
+    x = (x * _M1) & _MASK64
+    x ^= x >> 27
+    x = (x * _M2) & _MASK64
+    x ^= x >> 31
+    return x
+
+
+def np_hash_u64(x: int, seed: int = 0) -> int:
+    return np_mix64((x + (seed + 1) * _GAMMA) & _MASK64)
+
+
+def np_rotl64(x: int, n: int) -> int:
+    x &= _MASK64
+    return ((x << n) | (x >> (64 - n))) & _MASK64
+
+
+def np_combine(a: int, b: int) -> int:
+    """Python mirror of combine() for the oracle tests (canonical order is
+    the caller's job, as in the JAX path)."""
+    h = (np_mix64(a) ^ np_rotl64(b, 29)) & _MASK64
+    h = (h + _GAMMA) & _MASK64
+    return np_mix64(h)
+
+
+def np_hash_bytes(data: bytes, seed: int = 0) -> int:
+    """Deterministic 64-bit hash of a byte string (host-side tokenizer).
+
+    splitmix-style sponge over 8-byte little-endian chunks. Not crypto;
+    just a stable, well-mixed fingerprint identical across runs/platforms.
+    """
+    h = np_hash_u64(len(data), seed)
+    for i in range(0, len(data), 8):
+        chunk = int.from_bytes(data[i : i + 8], "little")
+        h = np_mix64((h ^ chunk) + _GAMMA & _MASK64)
+    return h
+
+
+def np_to_u64_arrays(values) -> np.ndarray:
+    """Python ints -> packed (..., 2) uint32 array (storage form)."""
+    arr = np.asarray(values, dtype=np.uint64)
+    hi = (arr >> np.uint64(32)).astype(np.uint32)
+    lo = (arr & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return np.stack([hi, lo], axis=-1)

@@ -1,0 +1,307 @@
+"""Hashed Dynamic Blocking — Algorithms 1–4 of the paper, in fixed-shape JAX.
+
+The iteration state is a dense per-record key matrix (records never move;
+only 64-bit key hashes flow — the paper's data-movement thesis). Each host-
+level iteration runs one jit-compiled step:
+
+  1. ROUGH OVER-SIZE DETECTION (Alg. 3): build a Count-Min Sketch over all
+     live (record, key) entries, query approximate block sizes. Keys with
+     ``s <= MAX_BLOCK_SIZE`` are right-sized (CMS never undercounts, so this
+     is safe). Keys failing the progress heuristic ``s/psize > MAX_SIMILARITY``
+     are discarded.
+  2. EXACTLY COUNT AND DEDUPE (Alg. 4): sort surviving entries by key;
+     segmented count + XOR-of-rid-fingerprints give every entry its exact
+     block size and its block's membership hash. Blocks the CMS over-counted
+     are recovered as right-sized. Over-sized blocks with identical
+     membership hashes are duplicates — one survivor is kept (smallest key).
+  3. INTERSECT KEYS (Alg. 2): each record combines pairs of its surviving
+     over-sized keys into new candidate keys carrying
+     ``psize = min(parent sizes)``; records holding more than ``MAX_KEYS``
+     keys are dropped from further processing.
+
+Single-device path below; the shard_map-distributed path (sketch
+all-reduce + all_to_all exact counting + Bloom/table broadcast, faithful
+to the paper's Spark dataflow) lives in ``core/distributed.py`` and reuses
+these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import u64, hashing, segments, sketches
+from .u64 import U64
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class HDBConfig:
+    """Hyper-parameters (paper §5 defaults)."""
+
+    max_block_size: int = 500
+    max_keys: int = 80            # Alg. 2 line 2: per-record key cap
+    max_similarity: float = 0.9   # progress heuristic (Alg. 3 line 11)
+    max_oversize_keys: int = 16   # TPU adaptation: keys carried into intersection
+    max_iterations: int = 8
+    cms_depth: int = 4
+    cms_width: int = 1 << 20
+    rep_capacity: int = 1 << 20   # capacity for over-sized block representatives
+
+    @property
+    def cms(self) -> sketches.CMSConfig:
+        return sketches.CMSConfig(self.cms_depth, self.cms_width)
+
+    @property
+    def intersect_width(self) -> int:
+        ko = self.max_oversize_keys
+        return ko * (ko - 1) // 2
+
+
+@dataclasses.dataclass
+class IterationStats:
+    iteration: int
+    n_live_keys: int
+    n_right_cms: int        # accepted by CMS bound
+    n_right_exact: int      # recovered from CMS over-count
+    n_dropped_similarity: int
+    n_dropped_max_keys: int
+    n_duplicate_blocks: int
+    n_surviving_oversized: int  # unique over-sized blocks after dedupe
+    n_surviving_entries: int
+    rep_overflow: int
+
+
+@dataclasses.dataclass
+class BlockingResult:
+    """Accepted (record, key) assignments across all iterations."""
+
+    rids: np.ndarray        # (M,) int64 record ids
+    key_hi: np.ndarray      # (M,) uint32
+    key_lo: np.ndarray      # (M,) uint32
+    stats: List[IterationStats]
+    num_records: int
+
+
+# ---------------------------------------------------------------------------
+# Jitted single-device iteration
+# ---------------------------------------------------------------------------
+
+
+def rough_oversize_detection(cfg: HDBConfig, key: U64, valid: jnp.ndarray,
+                             psize: jnp.ndarray):
+    """Algorithm 3. Returns (right_mask, keep_mask, approx_counts)."""
+    flat_key = (key[0].reshape(-1), key[1].reshape(-1))
+    flat_valid = valid.reshape(-1)
+    cms = sketches.cms_build(cfg.cms, flat_key, flat_valid)
+    s = sketches.cms_query(cfg.cms, cms, flat_key).reshape(valid.shape)
+    right = valid & (s <= cfg.max_block_size)
+    progress = s.astype(jnp.float32) <= cfg.max_similarity * psize.astype(jnp.float32)
+    keep = valid & ~right & progress
+    dropped_sim = valid & ~right & ~progress
+    return right, keep, dropped_sim, s
+
+
+def exactly_count_and_dedupe(cfg: HDBConfig, key: U64, keep: jnp.ndarray):
+    """Algorithm 4 (single-shard fast path — see core/distributed.py for the
+    all_to_all + Bloom-broadcast variant).
+
+    Returns dense (same shape as keep):
+      right_exact: mask of entries whose block the CMS over-counted
+      survive:     mask of entries on surviving (deduped) over-sized blocks
+      size:        exact block size for `survive` entries
+      plus (survivor key table, diagnostics) for downstream use.
+    """
+    n, k = keep.shape
+    flat = keep.reshape(-1)
+    nk = n * k
+    rid = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k)).reshape(-1)
+    khi = jnp.where(flat, key[0].reshape(-1), jnp.uint32(0xFFFFFFFF))
+    klo = jnp.where(flat, key[1].reshape(-1), jnp.uint32(0xFFFFFFFF))
+    orig = jnp.arange(nk, dtype=jnp.int32)
+    (shi, slo), (srid, sorig) = segments.sort_by_key((khi, klo), [rid, orig])
+    skey = (shi, slo)
+    live = ~u64.is_sentinel(skey)
+    sizes = segments.segment_counts(skey)
+    fp = hashing.fingerprint_rid(srid)
+    fp = (jnp.where(live, fp[0], 0), jnp.where(live, fp[1], 0))
+    xors = segments.segment_xor(skey, fp)
+
+    over = live & (sizes > cfg.max_block_size)
+    right_exact_sorted = live & ~over
+
+    # --- dedupe over-sized blocks by membership fingerprint (XOR, size) ---
+    reps = segments.segment_starts(skey) & over
+    n_reps = jnp.sum(reps.astype(jnp.int32))
+    rep_idx = jnp.nonzero(reps, size=cfg.rep_capacity, fill_value=nk - 1)[0]
+    rep_valid = jnp.arange(cfg.rep_capacity, dtype=jnp.int32) < n_reps
+    rep_overflow = jnp.maximum(n_reps - cfg.rep_capacity, 0)
+    r_xhi = jnp.where(rep_valid, xors[0][rep_idx], jnp.uint32(0xFFFFFFFF))
+    r_xlo = jnp.where(rep_valid, xors[1][rep_idx], jnp.uint32(0xFFFFFFFF))
+    r_sz = jnp.where(rep_valid, sizes[rep_idx], INT32_MAX)
+    r_khi = jnp.where(rep_valid, shi[rep_idx], jnp.uint32(0xFFFFFFFF))
+    r_klo = jnp.where(rep_valid, slo[rep_idx], jnp.uint32(0xFFFFFFFF))
+    # sort by (xor, size, key): duplicates (same membership) become adjacent;
+    # the smallest key of each duplicate group survives (full lexicographic
+    # sort makes the survivor deterministic).
+    r_xhi, r_xlo, r_sz, r_khi, r_klo = jax.lax.sort(
+        (r_xhi, r_xlo, r_sz, r_khi, r_klo), num_keys=5)
+    same_prev = (
+        (r_xhi == jnp.roll(r_xhi, 1)) & (r_xlo == jnp.roll(r_xlo, 1))
+        & (r_sz == jnp.roll(r_sz, 1)))
+    same_prev = same_prev.at[0].set(False)
+    survivor = rep_valid_sorted = ~((r_khi == jnp.uint32(0xFFFFFFFF)) & (r_klo == jnp.uint32(0xFFFFFFFF)))
+    survivor = survivor & ~same_prev
+    n_dup = jnp.sum((rep_valid_sorted & same_prev).astype(jnp.int32))
+
+    # survivor table sorted by key for O(log) lookups (the paper's
+    # "broadcasted counts map")
+    t_khi = jnp.where(survivor, r_khi, jnp.uint32(0xFFFFFFFF))
+    t_klo = jnp.where(survivor, r_klo, jnp.uint32(0xFFFFFFFF))
+    t_sz = jnp.where(survivor, r_sz, 0)
+    t_khi, t_klo, t_sz = jax.lax.sort((t_khi, t_klo, t_sz), num_keys=2)
+    table = ((t_khi, t_klo), t_sz)
+
+    # classify sorted entries: over-sized entries survive iff their key is in
+    # the survivor table (duplicates' keys are absent -> dropped).
+    hit, _ = segments.lookup_u64((t_khi, t_klo), t_sz, skey, 0)
+    survive_sorted = over & hit
+
+    # scatter back to dense layout
+    def unsort(x_sorted, fill):
+        out = jnp.full((nk,), fill, x_sorted.dtype)
+        return out.at[sorig].set(x_sorted)
+
+    right_exact = unsort(right_exact_sorted, False).reshape(n, k) & keep
+    survive = unsort(survive_sorted, False).reshape(n, k) & keep
+    size = unsort(jnp.where(live, sizes, 0), 0).reshape(n, k)
+    n_survivors = jnp.sum(survivor.astype(jnp.int32))
+    return right_exact, survive, size, table, n_dup, n_survivors, rep_overflow
+
+
+def intersect_keys(cfg: HDBConfig, key: U64, survive: jnp.ndarray,
+                   size: jnp.ndarray):
+    """Algorithm 2: pairwise-intersect each record's over-sized keys.
+
+    Keeps the ``max_oversize_keys`` smallest surviving blocks per record
+    (rarest = most discriminative; DESIGN.md §2) and emits all pairwise
+    combinations with ``psize = min(parent sizes)``.
+    """
+    n, k = survive.shape
+    ko = min(cfg.max_oversize_keys, k)
+    n_keys = jnp.sum(survive.astype(jnp.int32), axis=1)
+    row_dead = n_keys > cfg.max_keys  # Alg. 2 line 2
+    # order keys: surviving first, then by exact size ascending; key value
+    # breaks ties so the cap selection is deterministic (oracle-testable)
+    sort_sz = jnp.where(survive, size, INT32_MAX)
+    sort_sz, khi_s, klo_s, surv_s = jax.lax.sort(
+        (sort_sz, key[0], key[1], survive.astype(jnp.int32)), num_keys=3, dimension=1)
+    khi_s, klo_s = khi_s[:, :ko], klo_s[:, :ko]
+    sz_s = sort_sz[:, :ko]
+    ok = (surv_s[:, :ko] > 0) & ~row_dead[:, None]
+
+    ii, jj = np.triu_indices(ko, 1)
+    a = (khi_s[:, ii], klo_s[:, ii])
+    b = (khi_s[:, jj], klo_s[:, jj])
+    lo_key = u64.minimum(a, b)
+    hi_key = u64.where(u64.eq(lo_key, a), b, a)
+    new_key = hashing.combine(lo_key, hi_key)
+    new_psize = jnp.minimum(sz_s[:, ii], sz_s[:, jj])
+    new_valid = ok[:, ii] & ok[:, jj]
+    new_khi = jnp.where(new_valid, new_key[0], jnp.uint32(0xFFFFFFFF))
+    new_klo = jnp.where(new_valid, new_key[1], jnp.uint32(0xFFFFFFFF))
+    # per-record set semantics: one row-sort carrying psize, then mask repeats
+    s_khi, s_klo, s_psize, s_valid = jax.lax.sort(
+        (new_khi, new_klo, new_psize, new_valid.astype(jnp.int32)),
+        num_keys=2, dimension=1)
+    same_prev = jnp.concatenate(
+        [jnp.zeros((s_khi.shape[0], 1), bool),
+         (s_khi[:, 1:] == s_khi[:, :-1]) & (s_klo[:, 1:] == s_klo[:, :-1])], axis=1)
+    out_valid = (s_valid > 0) & ~same_prev
+    n_dropped_max_keys = jnp.sum(row_dead.astype(jnp.int32))
+    return (s_khi, s_klo), out_valid, s_psize, n_dropped_max_keys
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def hdb_iteration(cfg: HDBConfig, keys_packed: jnp.ndarray, valid: jnp.ndarray,
+                  psize: jnp.ndarray):
+    """One full HDB iteration. Returns (accepted_mask, new_state, stats)."""
+    key = (keys_packed[..., 0], keys_packed[..., 1])
+    right_cms, keep, dropped_sim, _ = rough_oversize_detection(cfg, key, valid, psize)
+    (right_exact, survive, size, _table, n_dup, n_survivors,
+     rep_overflow) = exactly_count_and_dedupe(cfg, key, keep)
+    accepted = right_cms | right_exact
+    new_key, new_valid, new_psize, n_dropped_mk = intersect_keys(cfg, key, survive, size)
+    stats = {
+        "n_live_keys": jnp.sum(valid.astype(jnp.int32)),
+        "n_right_cms": jnp.sum(right_cms.astype(jnp.int32)),
+        "n_right_exact": jnp.sum(right_exact.astype(jnp.int32)),
+        "n_dropped_similarity": jnp.sum(dropped_sim.astype(jnp.int32)),
+        "n_dropped_max_keys": n_dropped_mk,
+        "n_duplicate_blocks": n_dup,
+        "n_surviving_oversized": n_survivors,
+        "n_surviving_entries": jnp.sum(survive.astype(jnp.int32)),
+        "rep_overflow": rep_overflow,
+    }
+    new_state = (jnp.stack([new_key[0], new_key[1]], axis=-1), new_valid, new_psize)
+    return accepted, new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# Host-side driver (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def hashed_dynamic_blocking(
+    keys_packed: jnp.ndarray,
+    valid: jnp.ndarray,
+    cfg: HDBConfig = HDBConfig(),
+    verbose: bool = False,
+) -> BlockingResult:
+    """Run HDB to convergence over a dense top-level key matrix.
+
+    Args:
+      keys_packed: (N, K, 2) uint32 u64 keys from ``blocks.build_keys``.
+      valid: (N, K) bool.
+    """
+    n = valid.shape[0]
+    psize = jnp.full(valid.shape, INT32_MAX, jnp.int32)
+    acc_rid: List[np.ndarray] = []
+    acc_hi: List[np.ndarray] = []
+    acc_lo: List[np.ndarray] = []
+    all_stats: List[IterationStats] = []
+    for it in range(cfg.max_iterations):
+        accepted, (new_keys, new_valid, new_psize), stats = hdb_iteration(
+            cfg, keys_packed, valid, psize)
+        acc_np = np.asarray(accepted)
+        ridx, kidx = np.nonzero(acc_np)
+        keys_np = np.asarray(keys_packed)
+        acc_rid.append(ridx.astype(np.int64))
+        acc_hi.append(keys_np[ridx, kidx, 0])
+        acc_lo.append(keys_np[ridx, kidx, 1])
+        st = IterationStats(iteration=it, **{k: int(v) for k, v in stats.items()})
+        all_stats.append(st)
+        if verbose:
+            print(f"[hdb] iter={it} {st}")
+        if st.rep_overflow:
+            print(f"[hdb] WARNING: representative capacity overflow "
+                  f"({st.rep_overflow} blocks dropped); raise rep_capacity")
+        keys_packed, valid, psize = new_keys, new_valid, new_psize
+        if st.n_surviving_entries == 0:
+            break
+    else:
+        leftover = int(jnp.sum(valid.astype(jnp.int32)))
+        if leftover and verbose:
+            print(f"[hdb] max_iterations reached with {leftover} live keys dropped")
+    return BlockingResult(
+        rids=np.concatenate(acc_rid) if acc_rid else np.zeros((0,), np.int64),
+        key_hi=np.concatenate(acc_hi) if acc_hi else np.zeros((0,), np.uint32),
+        key_lo=np.concatenate(acc_lo) if acc_lo else np.zeros((0,), np.uint32),
+        stats=all_stats,
+        num_records=n,
+    )

@@ -1,0 +1,92 @@
+"""MinHash + LSH(b, w) banding — the paper's §2.1 block building.
+
+For a record's token set S, `m = b*w` MinHashes are computed; each band of
+`w` consecutive MinHashes is hashed into one 64-bit blocking key. Two
+records with Jaccard similarity j share at least one band key with
+probability ``LSH(b, w, j) = 1 - (1 - j^w)^b`` (paper Fig. 1a).
+
+The pure-jnp implementation here is the reference path; the Pallas TPU
+kernel in ``repro.kernels.minhash`` computes the same MinHash matrix with
+VMEM tiling and is validated against this module.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import u64, hashing
+from .u64 import U64
+
+_MH_SEED = 0x3141
+
+
+def minhash_tokens(tokens: jnp.ndarray, mask: jnp.ndarray, num_hashes: int,
+                   seed: int = _MH_SEED) -> jnp.ndarray:
+    """MinHash matrix for padded token sets.
+
+    Args:
+      tokens: (R, T) uint32 token hashes.
+      mask:   (R, T) bool validity (False = padding).
+      num_hashes: m, number of independent hash functions.
+
+    Returns:
+      (R, m) uint32 MinHash values. Rows with no valid token get 0xFFFFFFFF.
+    """
+    tokens = tokens.astype(jnp.uint32)
+    # Per-hash seed addends precomputed as u64 constants (a traced loop index
+    # cannot multiply 64-bit python constants).
+    gamma = 0x9E3779B97F4A7C15
+    consts = [((seed + 977 * i + 1) * gamma) & ((1 << 64) - 1) for i in range(num_hashes)]
+    add_hi = jnp.asarray([c >> 32 for c in consts], jnp.uint32)
+    add_lo = jnp.asarray([c & 0xFFFFFFFF for c in consts], jnp.uint32)
+
+    def one_hash(i, acc):
+        x = u64.add(u64.from_u32(tokens), (add_hi[i], add_lo[i]))
+        _, lo = hashing.mix64(x)  # (R, T) uint32
+        lo = jnp.where(mask, lo, jnp.uint32(0xFFFFFFFF))
+        return acc.at[:, i].set(jnp.min(lo, axis=1))
+
+    init = jnp.zeros((tokens.shape[0], num_hashes), jnp.uint32)
+    return jax.lax.fori_loop(0, num_hashes, one_hash, init)
+
+
+def band_keys(minhashes: jnp.ndarray, bands: int, rows_per_band: int,
+              column_seed: int = 0) -> U64:
+    """Hash each band of `rows_per_band` MinHashes into one u64 blocking key.
+
+    Returns (hi, lo) of shape (R, bands). `column_seed` namespaces keys per
+    source column (the paper applies LSH per column, not whole-record).
+    """
+    r, m = minhashes.shape
+    assert m == bands * rows_per_band, (m, bands, rows_per_band)
+    grouped = minhashes.reshape(r, bands, rows_per_band)
+    h = u64.full((r, bands), 0)
+    h = hashing.hash_u64(h, seed=0x15A4 + column_seed)
+    for k in range(rows_per_band):  # static small loop: sponge over the band
+        tok = u64.from_u32(grouped[:, :, k])
+        h = hashing.mix64(u64.add(u64.xor(h, tok), u64.from_int(0x9E3779B97F4A7C15)))
+    # add band index so band 0 of one column never collides with band 1
+    band_idx = jnp.broadcast_to(jnp.arange(bands, dtype=jnp.uint32)[None, :], (r, bands))
+    h = hashing.mix64(u64.xor(h, u64.from_u32(band_idx)))
+    return h
+
+
+def lsh_keys(tokens: jnp.ndarray, mask: jnp.ndarray, bands: int,
+             rows_per_band: int, column_seed: int = 0) -> Tuple[U64, jnp.ndarray]:
+    """LSH blocking keys + validity for a padded token-set column.
+
+    Rows with zero valid tokens emit no keys (valid=False).
+    """
+    mh = minhash_tokens(tokens, mask, bands * rows_per_band)
+    keys = band_keys(mh, bands, rows_per_band, column_seed)
+    any_tok = jnp.any(mask, axis=1, keepdims=True)
+    valid = jnp.broadcast_to(any_tok, keys[0].shape)
+    return keys, valid
+
+
+def lsh_probability(bands: int, rows_per_band: int, jaccard) -> jnp.ndarray:
+    """Analytic LSH(b, w, j) = 1 - (1 - j^w)^b (paper Fig. 1a)."""
+    j = jnp.asarray(jaccard, jnp.float64 if False else jnp.float32)
+    return 1.0 - (1.0 - j ** rows_per_band) ** bands

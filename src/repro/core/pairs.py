@@ -1,0 +1,226 @@
+"""Pair materialization + deduplication (paper §3.1 "Pair Deduplication").
+
+Runs host-side in numpy: this is the *output* stage — the paper also only
+materializes pairs once, after all iterations, because it is the single
+most expensive data-movement step. Features:
+
+- block reconstruction (group accepted (rid, key) assignments by key),
+- exact distinct-pair emission with "largest block wins" provenance,
+- the paper's strictly-upper-triangular pair *bitmap* encoding
+  ``b(i,j,n) = i*(n-1) - (i-1)*i/2 + j - i - 1`` for compactly shipping a
+  filtered subset of a block's pairs to pairwise matching,
+- a pair-budget guard: beyond ``budget`` pairs we fall back to exact
+  *counting* plus uniform pair sampling (one CPU core cannot materialize
+  the paper's 68B pairs; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from .hdb import BlockingResult
+
+
+@dataclasses.dataclass
+class Blocks:
+    """Accepted blocks in CSR-ish form, sorted by (key, rid)."""
+
+    key_hi: np.ndarray   # (B,) uint32 block key
+    key_lo: np.ndarray   # (B,) uint32
+    start: np.ndarray    # (B,) int64 offset into members
+    size: np.ndarray     # (B,) int64
+    members: np.ndarray  # (M,) int64 rids, sorted within each block
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.start)
+
+    @property
+    def num_pair_slots(self) -> int:
+        """Sum over blocks of C(n,2) — pairs BEFORE cross-block dedupe."""
+        return int(np.sum(self.size * (self.size - 1) // 2))
+
+
+def build_blocks(result: BlockingResult, min_size: int = 2) -> Blocks:
+    """Group accepted (rid, key) assignments into blocks."""
+    key64 = (result.key_hi.astype(np.uint64) << np.uint64(32)) | result.key_lo.astype(np.uint64)
+    order = np.lexsort((result.rids, key64))
+    key64 = key64[order]
+    rids = result.rids[order]
+    if len(key64) == 0:
+        z64 = np.zeros((0,), np.int64)
+        zu = np.zeros((0,), np.uint32)
+        return Blocks(zu, zu, z64, z64, z64)
+    starts = np.flatnonzero(np.concatenate([[True], key64[1:] != key64[:-1]]))
+    sizes = np.diff(np.concatenate([starts, [len(key64)]]))
+    keep = sizes >= min_size
+    starts, sizes = starts[keep], sizes[keep]
+    keys = key64[starts]
+    return Blocks(
+        key_hi=(keys >> np.uint64(32)).astype(np.uint32),
+        key_lo=(keys & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+        start=starts.astype(np.int64),
+        size=sizes.astype(np.int64),
+        members=rids,
+    )
+
+
+def iter_block_pairs(blocks: Blocks, chunk_pairs: int = 2_000_000
+                     ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Yield (a, b, block_size) pair chunks across all blocks.
+
+    Small blocks are emitted with the vectorized shift method: for offset d,
+    every element pairs with the element d positions later iff both are in
+    the same block. Large blocks fall back to per-block meshgrid emission.
+    """
+    small_cut = 64
+    small = blocks.size <= small_cut
+    # --- small blocks: shift method over one concatenated array ---
+    if np.any(small):
+        s_start = blocks.start[small]
+        s_size = blocks.size[small]
+        total = int(s_size.sum())
+        # vectorized gather of each kept block's member range
+        offs = np.arange(total) - np.repeat(np.cumsum(s_size) - s_size, s_size)
+        mem = blocks.members[np.repeat(s_start, s_size) + offs]
+        seg = np.repeat(np.arange(len(s_size)), s_size)
+        bsz = np.repeat(s_size, s_size)
+        max_d = int(s_size.max())
+        buf_a, buf_b, buf_s, buffered = [], [], [], 0
+        for d in range(1, max_d):
+            ok = seg[d:] == seg[:-d]
+            if not ok.any():
+                continue
+            buf_a.append(mem[:-d][ok])
+            buf_b.append(mem[d:][ok])
+            buf_s.append(bsz[:-d][ok])
+            buffered += int(ok.sum())
+            if buffered >= chunk_pairs:
+                yield np.concatenate(buf_a), np.concatenate(buf_b), np.concatenate(buf_s)
+                buf_a, buf_b, buf_s, buffered = [], [], [], 0
+        if buffered:
+            yield np.concatenate(buf_a), np.concatenate(buf_b), np.concatenate(buf_s)
+    # --- large blocks: per-block triangular emission ---
+    for bi in np.flatnonzero(~small):
+        s, n = int(blocks.start[bi]), int(blocks.size[bi])
+        m = blocks.members[s : s + n]
+        ii, jj = np.triu_indices(n, 1)
+        for off in range(0, len(ii), chunk_pairs):
+            sl = slice(off, off + chunk_pairs)
+            yield m[ii[sl]], m[jj[sl]], np.full(len(ii[sl]), n, np.int64)
+
+
+@dataclasses.dataclass
+class PairSet:
+    """Distinct pairs with largest-source-block provenance."""
+
+    a: np.ndarray          # (P,) int64, a < b
+    b: np.ndarray          # (P,) int64
+    src_size: np.ndarray   # (P,) int64 size of largest block producing the pair
+    exact: bool            # False => truncated by budget
+    total_slots: int       # sum C(n,2) before dedupe
+
+
+def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000) -> PairSet:
+    """RemoveDupePairs: distinct (a, b), keeping the largest source block."""
+    total = blocks.num_pair_slots
+    chunks_a, chunks_b, chunks_s = [], [], []
+    seen = 0
+    exact = True
+    for a, b, s in iter_block_pairs(blocks):
+        lo = np.minimum(a, b)
+        hi = np.maximum(a, b)
+        chunks_a.append(lo)
+        chunks_b.append(hi)
+        chunks_s.append(s)
+        seen += len(lo)
+        if seen > budget:
+            exact = False
+            break
+    if not chunks_a:
+        z = np.zeros((0,), np.int64)
+        return PairSet(z, z, z, True, total)
+    a = np.concatenate(chunks_a)
+    b = np.concatenate(chunks_b)
+    s = np.concatenate(chunks_s)
+    # sort by (a, b, -size); first of each (a, b) wins
+    order = np.lexsort((-s, b, a))
+    a, b, s = a[order], b[order], s[order]
+    first = np.concatenate([[True], (a[1:] != a[:-1]) | (b[1:] != b[:-1])])
+    return PairSet(a[first], b[first], s[first], exact, total)
+
+
+# ---------------------------------------------------------------------------
+# Triangular pair bitmap (paper §3.1 equation for b_{i,j})
+# ---------------------------------------------------------------------------
+
+
+def pair_bit_index(i: np.ndarray, j: np.ndarray, n: int) -> np.ndarray:
+    """Bit index of pair (i, j), i < j, in the C(n,2) upper-triangular map."""
+    i = np.asarray(i, np.int64)
+    j = np.asarray(j, np.int64)
+    return i * (n - 1) - (i - 1) * i // 2 + j - i - 1
+
+
+def pair_from_bit_index(bit: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of pair_bit_index (vectorized)."""
+    bit = np.asarray(bit, np.int64)
+    # row i satisfies cum(i) <= bit < cum(i+1), cum(i) = i*(n-1) - (i-1)i/2
+    i_all = np.arange(n, dtype=np.int64)
+    cum = i_all * (n - 1) - (i_all - 1) * i_all // 2
+    i = np.searchsorted(cum, bit, side="right") - 1
+    j = bit - cum[i] + i + 1
+    return i, j
+
+
+def build_pair_bitmap(n: int, kept_i: np.ndarray, kept_j: np.ndarray) -> np.ndarray:
+    """Packed uint8 bitmap of C(n,2) bits with the kept pairs set."""
+    nbits = n * (n - 1) // 2
+    bits = np.zeros(nbits, np.uint8)
+    bits[pair_bit_index(kept_i, kept_j, n)] = 1
+    return np.packbits(bits)
+
+
+def read_pair_bitmap(n: int, bitmap: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    nbits = n * (n - 1) // 2
+    bits = np.unpackbits(bitmap, count=nbits)
+    return pair_from_bit_index(np.flatnonzero(bits), n)
+
+
+# ---------------------------------------------------------------------------
+# Membership utilities for recall (PC) evaluation without full materialization
+# ---------------------------------------------------------------------------
+
+
+def pair_covered(result: BlockingResult, pairs_a: np.ndarray, pairs_b: np.ndarray
+                 ) -> np.ndarray:
+    """For labeled pairs (a, b): does any accepted block contain both?
+
+    Evaluated via a hash set of (key, rid) assignments — no pair
+    materialization, so it works at any scale (used for PC on datasets
+    whose full pair set exceeds the budget).
+    """
+    key64 = (result.key_hi.astype(np.uint64) << np.uint64(32)) | result.key_lo.astype(np.uint64)
+    assign = np.stack([key64, result.rids.astype(np.uint64)], axis=1)
+    # dictionary of key -> sorted rid ranges via lexsort
+    order = np.lexsort((assign[:, 1], assign[:, 0]))
+    k_sorted = assign[order, 0]
+    r_sorted = assign[order, 1]
+    covered = np.zeros(len(pairs_a), bool)
+    # group keys of record a: need per-record key lists -> sort by rid
+    order_r = np.lexsort((key64, result.rids))
+    rid_sorted = result.rids[order_r]
+    key_by_rid = key64[order_r]
+    for idx, (a, b) in enumerate(zip(pairs_a, pairs_b)):
+        lo = np.searchsorted(rid_sorted, a, "left")
+        hi = np.searchsorted(rid_sorted, a, "right")
+        for key in key_by_rid[lo:hi]:
+            klo = np.searchsorted(k_sorted, key, "left")
+            khi = np.searchsorted(k_sorted, key, "right")
+            pos = np.searchsorted(r_sorted[klo:khi], np.uint64(b))
+            if pos < khi - klo and r_sorted[klo + pos] == np.uint64(b):
+                covered[idx] = True
+                break
+    return covered

@@ -1,0 +1,124 @@
+"""Count-Min Sketch and Bloom filter — the paper's approximate structures.
+
+Both are *linear* sketches over fixed-size dense arrays, which is exactly
+what makes HDB distribution-friendly on a TPU pod: per-shard sketches are
+built locally and merged with a single all-reduce (`+` for CMS, max/OR for
+Bloom) instead of the Spark shuffle the paper's implementation uses
+(DESIGN.md §2).
+
+Count-Min semantics (paper §3.1 "Rough Over-sized Block Detection"): the
+approximate count is never *less* than the true count, so no truly
+over-sized block can be reported right-sized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import u64, hashing
+from .u64 import U64
+
+
+@dataclasses.dataclass(frozen=True)
+class CMSConfig:
+    depth: int = 4
+    width: int = 1 << 20  # power of two; index = hash & (width-1)
+
+    def __post_init__(self):
+        assert self.width & (self.width - 1) == 0, "width must be a power of 2"
+
+
+def cms_indices(cfg: CMSConfig, key: U64) -> jnp.ndarray:
+    """(depth, *key_shape) int32 bucket indices for a u64 key array."""
+    idx = []
+    for j in range(cfg.depth):
+        _, lo = hashing.hash_u64(key, seed=0xC0DE + j)
+        idx.append((lo & jnp.uint32(cfg.width - 1)).astype(jnp.int32))
+    return jnp.stack(idx, axis=0)
+
+
+def cms_build(cfg: CMSConfig, key: U64, mask: jnp.ndarray) -> jnp.ndarray:
+    """Build a (depth, width) int32 CMS from a flat array of keys."""
+    idx = cms_indices(cfg, key)  # (depth, n)
+    upd = mask.astype(jnp.int32)
+    sketch = jnp.zeros((cfg.depth, cfg.width), jnp.int32)
+    for j in range(cfg.depth):  # static, small depth
+        sketch = sketch.at[j].add(jnp.zeros((cfg.width,), jnp.int32).at[idx[j]].add(upd))
+    return sketch
+
+
+def cms_query(cfg: CMSConfig, sketch: jnp.ndarray, key: U64) -> jnp.ndarray:
+    """Approximate count per key: min over depth rows. Never undercounts."""
+    idx = cms_indices(cfg, key)
+    est = sketch[0, idx[0]]
+    for j in range(1, cfg.depth):
+        est = jnp.minimum(est, sketch[j, idx[j]])
+    return est
+
+
+def cms_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """CMS is a linear sketch: merging = elementwise add (== psum)."""
+    return a + b
+
+
+# ---------------------------------------------------------------------------
+# Bloom filter
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomConfig:
+    """Byte-per-bit Bloom filter (merge = elementwise max / OR).
+
+    The paper packs bits (<=100MB at 530M rows); at this container's scale a
+    byte-per-bit uint8 array is simpler and still small. Sizing follows the
+    standard m = -n ln p / (ln 2)^2, k = (m/n) ln 2.
+    """
+
+    num_slots: int = 1 << 22
+    num_hashes: int = 8
+
+    @staticmethod
+    def for_capacity(capacity: int, fpr: float = 1e-8) -> "BloomConfig":
+        capacity = max(capacity, 1)
+        m = int(-capacity * math.log(fpr) / (math.log(2) ** 2))
+        m = 1 << max(10, math.ceil(math.log2(m)))
+        k = max(1, round(m / capacity * math.log(2)))
+        return BloomConfig(num_slots=m, num_hashes=min(k, 30))
+
+
+def bloom_positions(cfg: BloomConfig, key: U64) -> jnp.ndarray:
+    """(num_hashes, *shape) positions via Kirsch–Mitzenmacher double hashing."""
+    _, h1 = hashing.hash_u64(key, seed=0xB100)
+    _, h2 = hashing.hash_u64(key, seed=0xB101)
+    h2 = h2 | jnp.uint32(1)  # odd => full-period stepping over power-of-2 table
+    mask = jnp.uint32(cfg.num_slots - 1)
+    return jnp.stack(
+        [((h1 + jnp.uint32(i) * h2) & mask).astype(jnp.int32) for i in range(cfg.num_hashes)],
+        axis=0,
+    )
+
+
+def bloom_build(cfg: BloomConfig, key: U64, mask: jnp.ndarray) -> jnp.ndarray:
+    pos = bloom_positions(cfg, key)  # (k, n)
+    bits = jnp.zeros((cfg.num_slots,), jnp.uint8)
+    upd = mask.astype(jnp.uint8)
+    for i in range(cfg.num_hashes):
+        bits = bits.at[pos[i]].max(upd)
+    return bits
+
+
+def bloom_query(cfg: BloomConfig, bits: jnp.ndarray, key: U64) -> jnp.ndarray:
+    pos = bloom_positions(cfg, key)
+    hit = bits[pos[0]] > 0
+    for i in range(1, cfg.num_hashes):
+        hit = hit & (bits[pos[i]] > 0)
+    return hit
+
+
+def bloom_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(a, b)

@@ -1,0 +1,180 @@
+"""64-bit unsigned integer arithmetic on uint32 limb pairs.
+
+TPUs have no native 64-bit integer lanes; XLA emulates them slowly and
+``jax_enable_x64`` is a global, trace-wide switch we do not want near the
+bf16 model stack. Instead every 64-bit hash in this framework is a pair of
+``uint32`` arrays ``(hi, lo)``. All ops below are elementwise, shape
+polymorphic, and wrap mod 2**64 exactly like hardware u64.
+
+A ``U64`` is simply a ``tuple[jnp.ndarray, jnp.ndarray]`` of equal-shape
+uint32 arrays ``(hi, lo)``. Helper pack/unpack functions move between this
+tuple form and a stacked ``(..., 2)`` array used for storage.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+U64 = Tuple[jnp.ndarray, jnp.ndarray]
+
+_U32 = jnp.uint32
+# numpy scalars (not jnp arrays) so they inline as jaxpr literals — required
+# for Pallas kernels, which reject closure-captured device constants.
+_MASK16 = np.uint32(0xFFFF)
+
+
+def u64(hi: int, lo: int) -> U64:
+    """Construct a scalar U64 constant from python ints."""
+    return np.uint32(hi & 0xFFFFFFFF), np.uint32(lo & 0xFFFFFFFF)
+
+
+def from_int(value: int) -> U64:
+    """Scalar U64 from a python int (mod 2**64)."""
+    value &= (1 << 64) - 1
+    return u64(value >> 32, value & 0xFFFFFFFF)
+
+
+def to_int(x: U64) -> int:
+    """Python int from a *concrete* scalar U64 (test helper)."""
+    return (int(x[0]) << 32) | int(x[1])
+
+
+def from_u32(x: jnp.ndarray) -> U64:
+    """Zero-extend uint32 array to U64."""
+    x = x.astype(_U32)
+    return jnp.zeros_like(x), x
+
+
+def full(shape, value: int) -> U64:
+    hi, lo = from_int(value)
+    return jnp.full(shape, hi, _U32), jnp.full(shape, lo, _U32)
+
+
+def pack(x: U64) -> jnp.ndarray:
+    """(hi, lo) tuple -> stacked (..., 2) uint32 array (storage form)."""
+    return jnp.stack([x[0], x[1]], axis=-1)
+
+
+def unpack(x: jnp.ndarray) -> U64:
+    """Stacked (..., 2) uint32 array -> (hi, lo) tuple."""
+    return x[..., 0], x[..., 1]
+
+
+def xor(a: U64, b: U64) -> U64:
+    return a[0] ^ b[0], a[1] ^ b[1]
+
+
+def bitand(a: U64, b: U64) -> U64:
+    return a[0] & b[0], a[1] & b[1]
+
+
+def bitor(a: U64, b: U64) -> U64:
+    return a[0] | b[0], a[1] | b[1]
+
+
+def add(a: U64, b: U64) -> U64:
+    """a + b mod 2**64."""
+    lo = a[1] + b[1]
+    carry = (lo < a[1]).astype(_U32)
+    hi = a[0] + b[0] + carry
+    return hi, lo
+
+
+def mul32_wide(a: jnp.ndarray, b: jnp.ndarray) -> U64:
+    """Full 32x32 -> 64 bit product of two uint32 arrays, via 16-bit limbs.
+
+    Every partial product of 16-bit halves fits in uint32 with headroom for
+    the carry chain below.
+    """
+    a = a.astype(_U32)
+    b = b.astype(_U32)
+    a0, a1 = a & _MASK16, a >> 16
+    b0, b1 = b & _MASK16, b >> 16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    # mid <= (2^16-1) + 2*(2^16-1) => fits easily in uint32
+    mid = (ll >> 16) + (lh & _MASK16) + (hl & _MASK16)
+    lo = (ll & _MASK16) | ((mid & _MASK16) << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def mul(a: U64, b: U64) -> U64:
+    """a * b mod 2**64."""
+    hi, lo = mul32_wide(a[1], b[1])
+    hi = hi + a[1] * b[0] + a[0] * b[1]  # cross terms mod 2**32
+    return hi, lo
+
+
+def mul_const(a: U64, c: int) -> U64:
+    """a * (python int constant) mod 2**64."""
+    return mul(a, from_int(c))
+
+
+def shr(a: U64, n: int) -> U64:
+    """Logical right shift by a static amount 0 <= n < 64."""
+    if n == 0:
+        return a
+    if n < 32:
+        lo = (a[1] >> n) | (a[0] << (32 - n))
+        hi = a[0] >> n
+    else:
+        lo = a[0] >> (n - 32) if n > 32 else a[0]
+        hi = jnp.zeros_like(a[0])
+    return hi, lo
+
+
+def shl(a: U64, n: int) -> U64:
+    """Left shift by a static amount 0 <= n < 64 (mod 2**64)."""
+    if n == 0:
+        return a
+    if n < 32:
+        hi = (a[0] << n) | (a[1] >> (32 - n))
+        lo = a[1] << n
+    else:
+        hi = a[1] << (n - 32) if n > 32 else a[1]
+        lo = jnp.zeros_like(a[1])
+    return hi, lo
+
+
+def rotl(a: U64, n: int) -> U64:
+    n %= 64
+    if n == 0:
+        return a
+    return bitor(shl(a, n), shr(a, 64 - n))
+
+
+def eq(a: U64, b: U64) -> jnp.ndarray:
+    return (a[0] == b[0]) & (a[1] == b[1])
+
+
+def lt(a: U64, b: U64) -> jnp.ndarray:
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (a[1] < b[1]))
+
+
+def le(a: U64, b: U64) -> jnp.ndarray:
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (a[1] <= b[1]))
+
+
+def where(pred: jnp.ndarray, a: U64, b: U64) -> U64:
+    return jnp.where(pred, a[0], b[0]), jnp.where(pred, a[1], b[1])
+
+
+def minimum(a: U64, b: U64) -> U64:
+    return where(lt(a, b), a, b)
+
+
+# Sentinel = 0xFFFF... ; sorts after every real key, used as "no key" padding.
+SENTINEL = (np.uint32(0xFFFFFFFF), np.uint32(0xFFFFFFFF))
+
+
+def sentinel(shape) -> U64:
+    return full(shape, (1 << 64) - 1)
+
+
+def is_sentinel(a: U64) -> jnp.ndarray:
+    return (a[0] == np.uint32(0xFFFFFFFF)) & (a[1] == np.uint32(0xFFFFFFFF))

@@ -1,0 +1,40 @@
+"""Graph partitioning — stage 4 of the dedup pipeline (paper §1, [14,25]).
+
+Connected components over matched pairs via pointer-jumping label
+propagation: each node adopts the min label among its neighbors; labels
+then path-compress. Converges in O(log N) rounds; both phases are
+fixed-shape JAX ops so the whole thing jits and shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def connected_components(num_nodes: int, a: np.ndarray, b: np.ndarray,
+                         max_rounds: int = 64) -> np.ndarray:
+    """Component label per node (min node id in the component)."""
+    if len(a) == 0:
+        return np.arange(num_nodes, dtype=np.int64)
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+
+    def round_fn(state):
+        label, _ = state
+        la, lb = label[a], label[b]
+        new = jnp.minimum(la, lb)
+        label2 = label.at[a].min(new)
+        label2 = label2.at[b].min(new)
+        # pointer jumping: label <- label[label] twice
+        label2 = label2[label2]
+        label2 = label2[label2]
+        changed = jnp.any(label2 != label)
+        return label2, changed
+
+    def cond_fn(state):
+        return state[1]
+
+    init = (jnp.arange(num_nodes, dtype=jnp.int32), jnp.asarray(True))
+    label, _ = jax.lax.while_loop(cond_fn, round_fn, init)
+    return np.asarray(label).astype(np.int64)

@@ -1,0 +1,75 @@
+"""Pairwise matching — stage 3 of the 4-stage dedup pipeline (paper §1).
+
+The paper treats pairwise matching as downstream of blocking (their
+production system uses a trained model [6]; their evaluation uses a
+pre-trained "oracle"). Here the oracle is a weighted token-overlap scorer
+over the same padded token columns used for blocking: it is vectorized
+over candidate pairs in JAX and is deliberately much more expensive per
+pair than blocking — preserving the economics that make blocking matter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.blocks import TokenColumn
+
+
+@dataclasses.dataclass(frozen=True)
+class MatcherConfig:
+    threshold: float = 0.65
+    # per-column weights; text columns dominate, scalar agreement helps
+    weights: tuple = (("name", 0.4), ("description", 0.3), ("brand", 0.1),
+                      ("category", 0.05), ("model_no", 0.15))
+
+
+def _pair_jaccard(tok: jnp.ndarray, mask: jnp.ndarray, a: jnp.ndarray,
+                  b: jnp.ndarray) -> jnp.ndarray:
+    """Jaccard of padded token sets for record index pairs (a, b)."""
+    ta, ma = tok[a], mask[a]
+    tb, mb = tok[b], mask[b]
+    eq = (ta[:, :, None] == tb[:, None, :]) & ma[:, :, None] & mb[:, None, :]
+    inter = jnp.sum(jnp.any(eq, axis=2), axis=1)
+    na = jnp.sum(ma, axis=1)
+    nb = jnp.sum(mb, axis=1)
+    union = na + nb - inter
+    both = (na > 0) & (nb > 0)
+    return jnp.where(both, inter / jnp.maximum(union, 1), 0.0), both
+
+
+@jax.jit
+def _score_batch(tokens, masks, weights, a, b):
+    total = jnp.zeros(a.shape, jnp.float32)
+    norm = jnp.zeros(a.shape, jnp.float32)
+    for i in range(len(weights)):
+        j, present = _pair_jaccard(tokens[i], masks[i], a, b)
+        w = weights[i]
+        total = total + w * j
+        norm = norm + jnp.where(present, w, 0.0)
+    return jnp.where(norm > 0, total / jnp.maximum(norm, 1e-6), 0.0)
+
+
+def score_pairs(columns: Dict[str, TokenColumn], a: np.ndarray, b: np.ndarray,
+                cfg: MatcherConfig = MatcherConfig(),
+                batch: int = 65536) -> np.ndarray:
+    """Similarity in [0,1] for each candidate pair."""
+    names = [n for n, _ in cfg.weights if n in columns]
+    tokens = tuple(columns[n].tokens for n in names)
+    masks = tuple(columns[n].mask for n in names)
+    weights = tuple(w for n, w in cfg.weights if n in columns)
+    out = np.empty(len(a), np.float32)
+    for off in range(0, len(a), batch):
+        sl = slice(off, off + batch)
+        out[sl] = np.asarray(_score_batch(
+            tokens, masks, weights,
+            jnp.asarray(a[sl], jnp.int32), jnp.asarray(b[sl], jnp.int32)))
+    return out
+
+
+def match_pairs(columns, a, b, cfg: MatcherConfig = MatcherConfig()) -> np.ndarray:
+    """Boolean match decision per candidate pair."""
+    return score_pairs(columns, a, b, cfg) >= cfg.threshold

@@ -1,0 +1,209 @@
+"""Synthetic dedup corpora with planted duplicate clusters + ground truth.
+
+The paper's commercial VARxx datasets (1M–530M product records, ~60 sparse
+columns) are not available; these generators produce structurally similar
+corpora (DESIGN.md §6): each *entity* has a canonical record; duplicates
+are corrupted copies (token dropout / substitution / swaps), mimicking the
+"same product, different listing" noise the paper targets. Complete ground
+truth (entity id per record) lets us compute PQ exactly instead of the
+paper's trained oracle.
+
+Columns emitted:
+  name        multi-token text (Zipfian vocab)  -> LSH blocking
+  description multi-token text, longer, noisier -> LSH blocking
+  brand       scalar categorical (skewed)       -> identity blocking
+  category    scalar categorical (few values)   -> identity blocking
+  model_no    quasi-unique scalar, often absent -> identity blocking
+
+Token "hashes" are uint32 drawn per vocab id via splitmix, so records go
+straight into the blocking stack without a string tokenizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from ..core import hashing
+from ..core.blocks import ColumnBlocking, TokenColumn
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SyntheticSpec:
+    num_entities: int = 5_000
+    dup_rate: float = 0.35          # fraction of entities with >=1 duplicate
+    max_dups: int = 4
+    name_len: Tuple[int, int] = (3, 8)
+    desc_len: Tuple[int, int] = (8, 24)
+    vocab: int = 50_000
+    zipf_a: float = 1.3
+    brand_card: int = 2_000
+    category_card: int = 40
+    model_no_present: float = 0.6
+    # corruption strength for duplicate copies
+    tok_dropout: float = 0.15
+    tok_substitute: float = 0.10
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Corpus:
+    columns: Dict[str, TokenColumn]
+    blocking: Dict[str, ColumnBlocking]
+    entity_id: np.ndarray       # (N,) ground-truth cluster per record
+    num_records: int
+
+    def labeled_pairs(self, max_pairs: int = 200_000, seed: int = 1
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """All (or sampled) positive pairs from ground truth clusters."""
+        order = np.argsort(self.entity_id, kind="stable")
+        ent = self.entity_id[order]
+        starts = np.flatnonzero(np.concatenate([[True], ent[1:] != ent[:-1]]))
+        sizes = np.diff(np.concatenate([starts, [len(ent)]]))
+        a_l, b_l = [], []
+        for s, n in zip(starts, sizes):
+            if n < 2:
+                continue
+            mem = order[s : s + n]
+            ii, jj = np.triu_indices(n, 1)
+            a_l.append(mem[ii])
+            b_l.append(mem[jj])
+        if not a_l:
+            z = np.zeros((0,), np.int64)
+            return z, z
+        a = np.concatenate(a_l)
+        b = np.concatenate(b_l)
+        if len(a) > max_pairs:
+            rng = np.random.default_rng(seed)
+            pick = rng.choice(len(a), max_pairs, replace=False)
+            a, b = a[pick], b[pick]
+        lo, hi = np.minimum(a, b), np.maximum(a, b)
+        return lo.astype(np.int64), hi.astype(np.int64)
+
+    def is_duplicate(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return self.entity_id[a] == self.entity_id[b]
+
+
+def _token_hash(ids: np.ndarray, namespace: int) -> np.ndarray:
+    """Stable uint32 token hash per vocab id."""
+    x = ids.astype(np.uint64) + np.uint64((namespace * 0x9E3779B97F4A7C15) & ((1 << 64) - 1))
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x &= np.uint64((1 << 64) - 1)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x &= np.uint64((1 << 64) - 1)
+    x ^= x >> np.uint64(31)
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def _zipf_ids(rng, n, vocab, a):
+    ids = rng.zipf(a, size=n)
+    return np.minimum(ids - 1, vocab - 1).astype(np.int64)
+
+
+def _corrupt(rng, tokens: np.ndarray, mask: np.ndarray, spec: SyntheticSpec,
+             namespace: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Corrupt one record's token row: dropout + substitution + swap."""
+    tokens = tokens.copy()
+    mask = mask.copy()
+    t = len(tokens)
+    drop = (rng.random(t) < spec.tok_dropout) & mask
+    # never drop everything
+    if drop.sum() >= mask.sum():
+        drop[np.flatnonzero(mask)[0]] = False
+    mask &= ~drop
+    sub = (rng.random(t) < spec.tok_substitute) & mask
+    n_sub = int(sub.sum())
+    if n_sub:
+        tokens[sub] = _token_hash(_zipf_ids(rng, n_sub, spec.vocab, spec.zipf_a), namespace)
+    return tokens, mask
+
+
+def generate(spec: SyntheticSpec) -> Corpus:
+    rng = np.random.default_rng(spec.seed)
+    # -- canonical entities --
+    e = spec.num_entities
+    name_w = spec.name_len[1]
+    desc_w = spec.desc_len[1]
+    name_len = rng.integers(spec.name_len[0], spec.name_len[1] + 1, e)
+    desc_len = rng.integers(spec.desc_len[0], spec.desc_len[1] + 1, e)
+    name_tok = _token_hash(_zipf_ids(rng, e * name_w, spec.vocab, spec.zipf_a), 1).reshape(e, name_w)
+    desc_tok = _token_hash(_zipf_ids(rng, e * desc_w, spec.vocab, spec.zipf_a), 2).reshape(e, desc_w)
+    name_mask = np.arange(name_w)[None, :] < name_len[:, None]
+    desc_mask = np.arange(desc_w)[None, :] < desc_len[:, None]
+    brand = _token_hash(rng.integers(0, spec.brand_card, e), 3)
+    # brands skewed: 20% of records share 5 mega-brands
+    mega = rng.random(e) < 0.2
+    brand[mega] = _token_hash(rng.integers(0, 5, int(mega.sum())), 4)
+    category = _token_hash(rng.integers(0, spec.category_card, e), 5)
+    model_no = _token_hash(rng.integers(0, 1 << 30, e), 6)
+    model_present = rng.random(e) < spec.model_no_present
+
+    # -- expand to records: canonical + duplicates --
+    n_dups = np.where(rng.random(e) < spec.dup_rate,
+                      rng.integers(1, spec.max_dups + 1, e), 0)
+    copies = 1 + n_dups
+    entity_id = np.repeat(np.arange(e), copies)
+    n = len(entity_id)
+    src = np.repeat(np.arange(e), copies)
+    is_dup = np.concatenate([np.arange(c) > 0 for c in copies]).astype(bool)
+
+    name_t = name_tok[src].copy()
+    name_m = name_mask[src].copy()
+    desc_t = desc_tok[src].copy()
+    desc_m = desc_mask[src].copy()
+    brand_r = brand[src].copy()
+    cat_r = category[src].copy()
+    model_r = model_no[src].copy()
+    model_m = model_present[src].copy()
+
+    dup_idx = np.flatnonzero(is_dup)
+    for i in dup_idx:
+        name_t[i], name_m[i] = _corrupt(rng, name_t[i], name_m[i], spec, 1)
+        desc_t[i], desc_m[i] = _corrupt(rng, desc_t[i], desc_m[i], spec, 2)
+        # duplicates sometimes lose / change scalar fields
+        if rng.random() < 0.15:
+            brand_r[i] = _token_hash(np.array([rng.integers(0, spec.brand_card)]), 3)[0]
+        if rng.random() < 0.5:
+            model_m[i] = False
+
+    perm = rng.permutation(n)
+
+    def col(tok, mask):
+        return TokenColumn(jnp.asarray(tok[perm]), jnp.asarray(mask[perm]))
+
+    columns = {
+        "name": col(name_t, name_m),
+        "description": col(desc_t, desc_m),
+        "brand": col(brand_r[:, None], np.ones((n, 1), bool)),
+        "category": col(cat_r[:, None], np.ones((n, 1), bool)),
+        "model_no": col(model_r[:, None], model_m[:, None]),
+    }
+    blocking = {
+        "name": ColumnBlocking.lsh(bands=6, rows_per_band=4),
+        "description": ColumnBlocking.lsh(bands=6, rows_per_band=4),
+        "brand": ColumnBlocking.identity(),
+        "category": ColumnBlocking.identity(),
+        "model_no": ColumnBlocking.identity(),
+    }
+    return Corpus(columns=columns, blocking=blocking,
+                  entity_id=entity_id[perm], num_records=n)
+
+
+def jaccard_pair_corpus(n_pairs: int, jaccard: float, set_size: int = 40,
+                        seed: int = 0):
+    """Pairs of token sets with (near-)exact Jaccard j — validates the
+    analytic LSH(b,w,j) curve of paper Fig. 1a empirically."""
+    rng = np.random.default_rng(seed)
+    inter = int(round(2 * set_size * jaccard / (1 + jaccard)))
+    only = set_size - inter
+    total = inter + 2 * only
+    base = rng.integers(0, 1 << 31, size=(n_pairs, total)).astype(np.uint32)
+    a = np.concatenate([base[:, :inter], base[:, inter:inter + only]], axis=1)
+    b = np.concatenate([base[:, :inter], base[:, inter + only:]], axis=1)
+    true_j = inter / (2 * set_size - inter) if (2 * set_size - inter) else 1.0
+    return a, b, true_j

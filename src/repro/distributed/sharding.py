@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Model code annotates activations with *logical* axis names via
+``lshard(x, "batch", "seq", None)``; parameters get logical axes from the
+path-pattern table in ``param_spec``. A ``ShardingRules`` context maps
+logical names to mesh axes; with no active context every annotation is a
+no-op, so the same model code runs in single-device smoke tests and on the
+512-chip production mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (str, tuple of str, or None)."""
+
+    mesh: Mesh
+    rules: Tuple[Tuple[str, object], ...]
+
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        for name, mesh_axis in self.rules:
+            if name == logical:
+                return mesh_axis
+        return None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.axis(l) for l in logical])
+
+
+def production_rules(mesh: Mesh, *, fsdp: bool = True,
+                     seq_shard: bool = False) -> ShardingRules:
+    """Default rules for the assignment's meshes.
+
+    batch -> all data-like axes (DP); heads/ffn/experts/vocab -> "model"
+    (TP/EP); optional FSDP shards the params' embed axis over "data";
+    seq_shard puts the sequence/KV-cache axis on "data" (SP) for the
+    batch=1 long-context shapes.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_axes = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    rules = [
+        ("batch", data_axes),
+        ("seq", data_axes if seq_shard else None),
+        ("kv_seq", data_axes if seq_shard else None),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("ffn", "model"),
+        ("experts", "model"),
+        ("vocab", "model"),
+        ("embed", None),
+        ("fsdp", "data" if fsdp and "data" in mesh.axis_names else None),
+        ("state", "model"),
+        ("moe_ff", None),  # expert-internal ff dim (serving TP; see dryrun)
+    ]
+    return ShardingRules(mesh=mesh, rules=tuple(rules))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[ShardingRules]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE.get()
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def guard_spec(mesh: Mesh, shape, spec: P) -> P:
+    """Replicate any dim whose size doesn't divide its assigned axes.
+
+    GQA archs with kv_heads < model-axis size, odd vocab, etc. fall back to
+    replication for that dim instead of failing to lower.
+    """
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        fixed.append(ax if (ax is not None and dim % _axis_size(mesh, ax) == 0)
+                     else None)
+    return P(*fixed)
+
+
+def lshard(x, *logical: Optional[str]):
+    """Constrain an activation to its logical sharding (no-op without rules)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = guard_spec(rules.mesh, x.shape, rules.spec(*logical))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: leaf-name pattern -> logical axes
+# ---------------------------------------------------------------------------
+
+# Patterns are matched against the '/'-joined param path. First match wins.
+# Axis entries name the LOGICAL axis of each tensor dim (None = replicated).
+_PARAM_PATTERNS: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # embeddings / output head: vocab-parallel + FSDP on embed
+    (r"embed/table$", ("vocab", "fsdp")),
+    (r"lm_head/w$", ("fsdp", "vocab")),
+    # attention
+    (r"attn/wq$", ("fsdp", "heads", None)),
+    (r"attn/wk$", ("fsdp", "kv_heads", None)),
+    (r"attn/wv$", ("fsdp", "kv_heads", None)),
+    (r"attn/wo$", ("heads", None, "fsdp")),
+    # MLA
+    (r"attn/w_dq$", ("fsdp", None)),
+    (r"attn/w_uq$", (None, "heads", None)),
+    (r"attn/w_dkv$", ("fsdp", None)),
+    (r"attn/w_ukv$", (None, "heads", None)),
+    (r"attn/w_kr$", ("fsdp", None)),
+    # dense mlp
+    (r"mlp/w_gate$", ("fsdp", "ffn")),
+    (r"mlp/w_up$", ("fsdp", "ffn")),
+    (r"mlp/w_down$", ("ffn", "fsdp")),
+    # moe
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_gate$", ("experts", "fsdp", "moe_ff")),
+    (r"moe/w_up$", ("experts", "fsdp", "moe_ff")),
+    (r"moe/w_down$", ("experts", "moe_ff", "fsdp")),
+    (r"moe/shared_.*$", ("fsdp", "ffn")),
+    (r"moe/shared_down$", ("ffn", "fsdp")),
+    # mamba
+    (r"mamba/w_in$", ("fsdp", "ffn")),
+    (r"mamba/w_z$", ("fsdp", "ffn")),
+    (r"mamba/w_out$", ("ffn", "fsdp")),
+    (r"mamba/(w_b|w_c|w_dt)$", ("ffn", None)),
+    (r"mamba/(a_log|dt_bias)$", ("ffn",) + (None,)),
+    (r"mamba/conv$", (None, "ffn")),
+    # rwkv
+    (r"rwkv/(w_r|w_k|w_v|w_g|w_w)$", ("fsdp", "ffn")),
+    (r"rwkv/w_o$", ("ffn", "fsdp")),
+    (r"rwkv/.*lora.*$", (None, None)),
+    # norms / scalars: replicated
+    (r".*(norm|ln|bias|scale).*$", None),
+)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pattern, axes in _PARAM_PATTERNS:
+        if re.search(pattern, path):
+            if axes is None:
+                return (None,) * ndim
+            if len(axes) == ndim:
+                return axes
+            # stacked-over-layers leading dim (scan): prepend None
+            if len(axes) == ndim - 1:
+                return (None,) + tuple(axes)
+    return (None,) * ndim
+
+
+def param_sharding(params, rules: ShardingRules):
+    """Pytree of NamedShardings matching `params` via the pattern table."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(p, "key", p)) for p in path)
+        axes = logical_axes_for(path_str, leaf.ndim)
+        spec = guard_spec(rules.mesh, leaf.shape, rules.spec(*axes))
+        out.append(NamedSharding(rules.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

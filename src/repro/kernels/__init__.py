@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel package ships three modules:
+  <name>.py  -- pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py     -- jit'd public wrapper (padding, dispatch, interpret switch)
+  ref.py     -- pure-jnp oracle used by the parity tests
+
+This container is CPU-only: kernels are validated with interpret=True
+(which executes the kernel body per-grid-step on CPU) against the oracles
+across shape/dtype sweeps in tests/test_kernels_*.py.
+"""

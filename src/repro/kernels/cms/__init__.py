@@ -1,0 +1,1 @@
+from .ops import cms_update  # noqa: F401

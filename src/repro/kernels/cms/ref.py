@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: scatter-add CMS build (the core library path)."""
+import jax.numpy as jnp
+
+
+def cms_update_ref(indices: jnp.ndarray, mask: jnp.ndarray, width: int):
+    depth, _ = indices.shape
+    upd = mask.reshape(-1).astype(jnp.int32)
+    out = jnp.zeros((depth, width), jnp.int32)
+    for d in range(depth):
+        out = out.at[d].add(jnp.zeros((width,), jnp.int32).at[indices[d]].add(upd))
+    return out

@@ -1,0 +1,1 @@
+from .ops import combine64, mix64_bulk  # noqa: F401

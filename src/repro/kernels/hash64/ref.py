@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for the hash64 kernels."""
+from ...core import u64, hashing
+
+
+def combine64_ref(ahi, alo, bhi, blo):
+    a, b = (ahi, alo), (bhi, blo)
+    lo_key = u64.minimum(a, b)
+    hi_key = u64.where(u64.eq(lo_key, a), b, a)
+    return hashing.combine(lo_key, hi_key)
+
+
+def mix64_ref(ahi, alo):
+    return hashing.mix64((ahi, alo))

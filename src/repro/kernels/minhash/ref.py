@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the MinHash kernel: the core library's reference
+implementation IS the oracle (it is itself property-tested against the
+analytic Jaccard/LSH behavior in tests/test_minhash.py)."""
+from ...core.minhash import minhash_tokens as minhash_ref  # noqa: F401

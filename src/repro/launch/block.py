@@ -1,0 +1,107 @@
+"""Distributed blocking launcher: run HDB itself on the production mesh.
+
+The paper's own workload as a first-class job: records shard over all mesh
+axes; sketches all-reduce; exact counts route via all_to_all
+(core/distributed.py). Dry-runs with 512 emulated devices:
+
+    PYTHONPATH=src python -m repro.launch.block --dryrun --mesh multi
+
+or executes for real on however many devices exist (tests use 8).
+"""
+import os
+
+if "--dryrun" in os.sys.argv:  # device count must be set before jax init
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from ..core import blocks, distributed, hdb  # noqa: E402
+from ..core.hdb import HDBConfig  # noqa: E402
+from ..data import synthetic  # noqa: E402
+from ..training import checkpoint  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .hlo_analysis import analyze  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile one iteration on the production mesh")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--entities", type=int, default=2000)
+    ap.add_argument("--records", type=int, default=0,
+                    help="dryrun: records per shard (default 4096)")
+    ap.add_argument("--max-block-size", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--rep-capacity", type=int, default=0,
+                    help="per-shard over-sized block rep capacity "
+                         "(0 = DistConfig default; sizes the survivor-table "
+                         "all-gather — see EXPERIMENTS.md §Perf-pipeline)")
+    ap.add_argument("--route-slack", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = HDBConfig(max_block_size=args.max_block_size)
+    dist_kw = {}
+    if args.rep_capacity:
+        dist_kw["rep_capacity_per_shard"] = args.rep_capacity
+    if args.route_slack:
+        dist_kw["route_slack"] = args.route_slack
+
+    if args.dryrun:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        axes = tuple(mesh.axis_names)
+        n_shards = mesh.devices.size
+        per_shard = args.records or 4096
+        n = per_shard * n_shards
+        k = 24
+        step = distributed.make_hdb_step(cfg, mesh, axes,
+                                         distributed.DistConfig(**dist_kw))
+        keys = jax.ShapeDtypeStruct((n, k, 2), jnp.uint32)
+        valid = jax.ShapeDtypeStruct((n, k), jnp.bool_)
+        psize = jax.ShapeDtypeStruct((n, k), jnp.int32)
+        t0 = time.time()
+        lowered = step.lower(keys, valid, psize)
+        compiled = lowered.compile()
+        roof, cost = analyze(compiled.as_text(), n_shards)
+        print(f"[block-dryrun] mesh={args.mesh} chips={n_shards} "
+              f"records={n:,} keys/rec={k}")
+        print(f"[block-dryrun] compile ok in {time.time()-t0:.1f}s")
+        print(f"[block-dryrun] mem: {compiled.memory_analysis()}")
+        print(f"[block-dryrun] roofline: compute={roof.compute_seconds:.3g}s "
+              f"memory={roof.memory_seconds:.3g}s "
+              f"collective={roof.collective_seconds:.3g}s "
+              f"dominant={roof.dominant}")
+        print(f"[block-dryrun] collective bytes/dev: {cost.coll_by_kind}")
+        return
+
+    corpus = synthetic.generate(synthetic.SyntheticSpec(
+        num_entities=args.entities, seed=3))
+    keys, valid = blocks.build_keys(corpus.columns, corpus.blocking)
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        pad = (-valid.shape[0]) % n_dev
+        if pad:
+            keys = jnp.concatenate([keys, jnp.full((pad,) + keys.shape[1:],
+                                                   0xFFFFFFFF, jnp.uint32)])
+            valid = jnp.concatenate([valid,
+                                     jnp.zeros((pad, valid.shape[1]), bool)])
+        cb = None
+        if args.ckpt_dir:
+            cb = lambda it, st: checkpoint.save(args.ckpt_dir, it, st)
+        res = distributed.distributed_hashed_dynamic_blocking(
+            keys, valid, cfg, mesh, ("data",), checkpoint_cb=cb, verbose=True)
+    else:
+        res = hdb.hashed_dynamic_blocking(keys, valid, cfg, verbose=True)
+    print(f"[block] accepted assignments: {len(res.rids):,} over "
+          f"{res.num_records:,} records")
+
+
+if __name__ == "__main__":
+    main()

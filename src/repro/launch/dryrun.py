@@ -1,0 +1,330 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective roofline terms.
+
+MUST be imported/run as a fresh process: the first two lines force 512
+placeholder host devices before jax locks the device count. Never set this
+in conftest/pyproject — smoke tests and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, get_config  # noqa: E402
+from ..configs.shapes import SHAPES, applicable  # noqa: E402
+from ..distributed.sharding import (ShardingRules, param_sharding,  # noqa: E402
+                                    production_rules, use_rules)
+from ..models.model import build_model  # noqa: E402
+from ..training.optimizer import OptimizerConfig  # noqa: E402
+from ..training.train_loop import TrainConfig, init_train_state, make_train_step  # noqa: E402
+from . import specs  # noqa: E402
+from .hlo_analysis import Roofline, analyze  # noqa: E402
+from .mesh import data_axes, make_production_mesh, num_chips  # noqa: E402
+
+
+def _batch_axes_or_none(rules, size_needed: int, mesh):
+    ax = rules.axis("batch")
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    dp = int(np.prod([mesh.shape[a] for a in axes if a]))
+    return ax if size_needed % dp == 0 and size_needed >= dp else None
+
+
+def batch_sharding(batch_tree, rules, mesh):
+    def one(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        ax = _batch_axes_or_none(rules, b, mesh)
+        spec = [ax] + [None] * (leaf.ndim - 1)
+        return NamedSharding(rules.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+_CACHE_BASE_NDIM = {"k": 4, "v": 4, "c_kv": 3, "k_rope": 3, "pos": 0,
+                    "h": 3, "conv": 3, "state": 4, "x_prev": 2}
+
+
+def cache_sharding(cache_tree, rules, mesh, cfg, batch_size: int):
+    """Leaf-name-based sharding for KV/SSM caches (stacked dims handled)."""
+    model_n = mesh.shape["model"]
+    kv_on_model = cfg.num_kv_heads % model_n == 0
+    b_ax = _batch_axes_or_none(rules, batch_size, mesh)
+    seq_ax = rules.axis("kv_seq")
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        base = _CACHE_BASE_NDIM.get(name, leaf.ndim)
+        stacked = leaf.ndim == base + 1
+        if name in ("k", "v"):
+            kv_ax = "model" if kv_on_model else None
+            s_ax = seq_ax if kv_on_model else (seq_ax or "model")
+            spec = [b_ax, s_ax, kv_ax, None]
+        elif name in ("c_kv", "k_rope"):
+            spec = [b_ax, seq_ax, None]
+        elif name == "h":      # mamba (B, d_inner, N)
+            spec = [b_ax, "model", None]
+        elif name == "conv":   # (B, K, d_inner)
+            spec = [b_ax, None, "model"]
+        elif name == "state":  # rwkv (B, H, dk, dv)
+            spec = [b_ax, "model", None, None]
+        elif name == "x_prev":
+            spec = [b_ax, None]
+        elif name == "pos":
+            spec = []
+        else:
+            spec = [None] * leaf.ndim
+        if stacked:
+            spec = [None] + spec
+        # divisibility guard: replicate any axis that doesn't divide
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            fixed.append(ax if dim % n == 0 else None)
+        return NamedSharding(rules.mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+@dataclasses.dataclass
+class CellOptions:
+    """Perf knobs swept during §Perf hillclimbing."""
+    remat: str = "full"
+    grad_accum: int = 0           # 0 = auto (per-device microbatch ~2)
+    fsdp: bool = True
+    param_dtype: Optional[str] = None
+    moment_dtype: str = "float32"
+    attn_chunk: int = 1024
+    scan_layers: bool = True
+    rwkv_impl: str = "scan"       # "chunked" = GLA-style parallel form
+    rwkv_chunk: int = 64
+    serving_tp_all: bool = False  # decode: shard ffn/expert dims over ALL axes
+    moe_impl: str = "psum"        # "a2a" = all_to_all EP dispatch
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: CellOptions = CellOptions(), *, mesh=None,
+             cfg=None, shape=None) -> dict:
+    """Lower+compile one cell. mesh/cfg/shape overrides exist so the test
+    suite can exercise this exact path on small emulated meshes."""
+    t0 = time.time()
+    shape = shape or SHAPES[shape_name]
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    cfg = cfg or get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, remat=opts.remat, attn_chunk_size=opts.attn_chunk,
+        scan_layers=opts.scan_layers, rwkv_impl=opts.rwkv_impl,
+        rwkv_chunk=opts.rwkv_chunk, moe_impl=opts.moe_impl,
+        **({"param_dtype": opts.param_dtype} if opts.param_dtype else {}))
+    rules = production_rules(mesh, fsdp=opts.fsdp,
+                             seq_shard=(shape.global_batch == 1))
+    if opts.serving_tp_all and shape.kind != "train":
+        # weight-stationary serving: inner (ffn/state) dims sharded over
+        # EVERY axis, expert-internal ff over the data axes — params
+        # resident, activations psum'd (§Perf)
+        all_axes = tuple(mesh.axis_names)
+        d_axes = data_axes(mesh)
+        remap = {"ffn": all_axes, "state": all_axes, "moe_ff": d_axes}
+        rules = dataclasses.replace(rules, rules=tuple(
+            (name, remap.get(name, ax)) for name, ax in rules.rules))
+    model = build_model(cfg)
+
+    dp = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    if shape.kind == "train":
+        accum = opts.grad_accum or max(1, shape.global_batch // (dp * 2))
+        while shape.global_batch % (accum * dp) or (shape.global_batch // accum) % dp:
+            accum -= 1
+        tcfg = TrainConfig(opt=OptimizerConfig(moment_dtype=opts.moment_dtype),
+                           grad_accum=accum)
+        state_shape = jax.eval_shape(
+            lambda k: init_train_state(model, k, tcfg), jax.random.PRNGKey(0))
+        p_shard = param_sharding(state_shape["params"], rules)
+        state_shard = {
+            "params": p_shard,
+            "opt": {"mu": p_shard, "nu": p_shard,
+                    "step": NamedSharding(mesh, P())},
+            "step": NamedSharding(mesh, P()),
+        }
+        batch_shape = specs.train_batch(cfg, shape.seq_len, shape.global_batch)
+        b_shard = batch_sharding(batch_shape, rules, mesh)
+        step_fn = make_train_step(model, tcfg)
+
+        with use_rules(rules):
+            lowered = jax.jit(step_fn,
+                              in_shardings=(state_shard, b_shard),
+                              donate_argnums=0).lower(state_shape, batch_shape)
+    elif shape.kind == "prefill":
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_shard = param_sharding(params_shape, rules)
+        batch_shape = specs.train_batch(cfg, shape.seq_len, shape.global_batch)
+        batch_shape.pop("targets")
+        b_shard = batch_sharding(batch_shape, rules, mesh)
+        caches = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len))
+        c_shard = cache_sharding(caches, rules, mesh, cfg, shape.global_batch)
+
+        def prefill_fn(params, batch, caches):
+            return model.prefill(params, batch, caches)
+
+        with use_rules(rules):
+            lowered = jax.jit(prefill_fn,
+                              in_shardings=(p_shard, b_shard, c_shard),
+                              donate_argnums=2).lower(params_shape, batch_shape,
+                                                      caches)
+    else:  # decode
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_shard = param_sharding(params_shape, rules)
+        token, caches, extras = specs.decode_inputs(model, shape.seq_len,
+                                                    shape.global_batch)
+        t_shard = batch_sharding(token, rules, mesh)
+        c_shard = cache_sharding(caches, rules, mesh, cfg, shape.global_batch)
+        e_shard = batch_sharding(extras, rules, mesh) if extras else None
+
+        def decode_fn(params, token, caches, extras):
+            return model.decode_step(params, token, caches, extras or None)
+
+        with use_rules(rules):
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, t_shard, c_shard,
+                              e_shard if extras else {}),
+                donate_argnums=2,
+            ).lower(params_shape, token, caches, extras)
+
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_d[attr] = getattr(mem, attr, None)
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    roof, hlo_cost = analyze(hlo_text, chips)
+    t_analyze = time.time()
+    hlo_dir = os.environ.get("REPRO_SAVE_HLO")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = os.environ.get("REPRO_HLO_TAG", "baseline")
+        fn = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{tag}.hlo.gz"
+        with gzip.open(os.path.join(hlo_dir, fn), "wt") as f:
+            f.write(hlo_text)
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips, "ok": True,
+        "options": dataclasses.asdict(opts),
+        "memory": mem_d,
+        "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed")},
+        "collectives": {"bytes": hlo_cost.coll_by_kind,
+                        "count": hlo_cost.coll_count},
+        "roofline": roof.as_dict(),
+        "seconds": {"lower": t_lower - t0, "compile": t_compile - t_lower,
+                    "analyze": t_analyze - t_compile},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--no-scan", action="store_true")
+    ap.add_argument("--rwkv-impl", default="scan")
+    ap.add_argument("--rwkv-chunk", type=int, default=64)
+    ap.add_argument("--serving-tp-all", action="store_true")
+    ap.add_argument("--moe-impl", default="psum")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    opts = CellOptions(remat=args.remat, grad_accum=args.grad_accum,
+                       fsdp=not args.no_fsdp, param_dtype=args.param_dtype,
+                       moment_dtype=args.moment_dtype,
+                       attn_chunk=args.attn_chunk,
+                       scan_layers=not args.no_scan,
+                       rwkv_impl=args.rwkv_impl,
+                       rwkv_chunk=args.rwkv_chunk,
+                       serving_tp_all=args.serving_tp_all,
+                       moe_impl=args.moe_impl)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                ok, why = applicable(arch, shape)
+                if ok:
+                    cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}__{args.tag}.json"
+            path = os.path.join(args.out, name)
+            if os.path.exists(path) and args.all:
+                print(f"[skip] {name}")
+                continue
+            try:
+                res = run_cell(arch, shape, mesh_kind == "multi", opts)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            status = "OK" if res.get("ok") else "FAIL"
+            extra = ""
+            if res.get("ok"):
+                r = res["roofline"]
+                extra = (f" flops/dev={r['flops_per_device']:.3g}"
+                         f" bound={r['dominant']}"
+                         f" t={r['compute_seconds']:.3g}/{r['memory_seconds']:.3g}"
+                         f"/{r['collective_seconds']:.3g}s")
+            print(f"[{status}] {arch} {shape} {mesh_kind}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

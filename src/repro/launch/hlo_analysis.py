@@ -1,0 +1,424 @@
+"""Loop-aware roofline-term extraction from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` reports per-device FLOPs/bytes but
+counts while-loop bodies ONCE (verified empirically — see
+tests/test_roofline.py), which under-counts scanned-layer models by the
+layer count. This module therefore walks the optimized HLO text and
+computes the three roofline terms itself:
+
+  - per-computation FLOPs: dot ops exactly (output elements x contraction
+    size), elementwise/reduce ops approximately (1 flop/output element);
+  - per-computation HBM bytes: operand + output bytes of top-level ops
+    (fusion-aware: inner ops of a fusion don't touch HBM);
+  - collective bytes: payload bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute;
+
+with while-loop bodies multiplied by their trip count (recovered from the
+loop condition's comparison constant) and fusion/call/conditional edges
+followed recursively. Everything is per-device: the module IS the
+per-device SPMD program.
+
+Hardware model (assignment): TPU v5e-class — 197 TFLOP/s bf16/chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce-start", "all-gather-start", "all-reduce",
+                "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute-start", "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "floor", "ceil",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "sign", "cosine", "sine", "logistic", "atan2",
+    "round-nearest-afz", "round-nearest-even", "expm1", "log1p", "cbrt",
+}
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "broadcast", "transpose", "copy",
+    "convert", "iota", "after-all", "partition-id", "replica-id", "domain",
+    "slice", "dynamic-slice", "dynamic-update-slice", "pad", "concatenate",
+    "reverse", "gather", "scatter", "rng-bit-generator", "optimization-barrier",
+    "copy-start", "copy-done", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "custom-call", "infeed", "outfeed",
+}
+
+# shapes like bf16[8,128]{1,0}
+_SHAPE_RE = re.compile(r"(\w[\w$]*)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+) = (.*)$")
+_OP_RE = re.compile(r"\s*([\w\-]+)\((.*)$", re.S)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _parse_def(line: str):
+    """Split '%name = SHAPE op(tail' robustly.
+
+    Tuple shapes contain '/*index=N*/' comments (with '='), so the shape is
+    extracted by paren matching, not by excluding '='.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_str, remainder = rest[: end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_str, remainder = rest[:sp], rest[sp + 1:]
+    m2 = _OP_RE.match(remainder)
+    if not m2:
+        return None
+    op, tail = m2.groups()
+    return name, shape_str, op, tail
+
+
+def _parse_shape(shape_str: str) -> Tuple[int, int]:
+    """(elements, bytes) over all array shapes present in the string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    rest: str  # operand list + attrs (un-parsed tail of the line)
+
+    @property
+    def out_elems(self) -> int:
+        return _parse_shape(self.shape_str)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _parse_shape(self.shape_str)[1]
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class HloCostModel:
+    """Per-device FLOPs / HBM bytes / collective bytes from HLO text."""
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.shape_of: Dict[str, str] = {}
+        self.const_val: Dict[str, int] = {}
+        self.entry: Optional[str] = None
+        self._memo: Dict[str, CompCost] = {}
+        self._dus_cache: Dict[str, bool] = {}
+        self._ds_cache: Dict[str, bool] = {}
+        self._parse(hlo_text)
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        current = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if line.endswith("{"):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    current = m.group(1)
+                    self.comps[current] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = current
+                    continue
+            if line.strip() == "}":
+                current = None
+                continue
+            parsed = _parse_def(line)
+            if parsed is None or current is None:
+                continue
+            name, shape_str, op, rest = parsed
+            instr = Instr(name, shape_str, op, rest)
+            self.comps[current].append(instr)
+            self.shape_of[name] = shape_str
+            if op == "constant":
+                mc = re.match(r"(\d+)\)", rest)
+                if mc:
+                    self.const_val[name] = int(mc.group(1))
+
+    # ------------------------------------------------------------ helpers
+    def _operand_names(self, instr: Instr) -> List[str]:
+        # operands are %name tokens before the first '),'
+        head = instr.rest.split("),")[0]
+        return re.findall(r"%([\w\.\-]+)", head)
+
+    def _operand_bytes(self, instr: Instr) -> int:
+        total = 0
+        for name in self._operand_names(instr):
+            if name in self.shape_of:
+                total += _parse_shape(self.shape_of[name])[1]
+        return total
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out_elems = instr.out_elems
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        ops = self._operand_names(instr)
+        if not mc or not ops or ops[0] not in self.shape_of:
+            return 2.0 * out_elems  # degenerate
+        lhs_dims_m = _SHAPE_RE.search(self.shape_of[ops[0]])
+        if not lhs_dims_m:
+            return 2.0 * out_elems
+        lhs_dims = [int(d) for d in lhs_dims_m.group(2).split(",") if d]
+        contract = 1
+        for idx in (int(i) for i in mc.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+        return 2.0 * out_elems * contract
+
+    def _called(self, instr: Instr, attr: str) -> Optional[str]:
+        m = re.search(attr + r"=%?([\w\.\-]+)", instr.rest)
+        return m.group(1) if m else None
+
+    def _has_dus(self, comp_name: str) -> bool:
+        if comp_name not in self._dus_cache:
+            self._dus_cache[comp_name] = any(
+                i.op == "dynamic-update-slice"
+                for i in self.comps.get(comp_name, []))
+        return self._dus_cache[comp_name]
+
+    def _has_ds(self, comp_name: str) -> bool:
+        if comp_name not in self._ds_cache:
+            self._ds_cache[comp_name] = any(
+                i.op in ("dynamic-slice", "slice")
+                for i in self.comps.get(comp_name, []))
+        return self._ds_cache[comp_name]
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Largest integer constant referenced by the loop condition."""
+        best = 1
+        for instr in self.comps.get(cond_name, []):
+            if instr.op == "constant" and instr.name in self.const_val:
+                best = max(best, self.const_val[instr.name])
+            for ref in re.findall(r"%(constant[\w\.\-]*)", instr.rest):
+                if ref in self.const_val:
+                    best = max(best, self.const_val[ref])
+        return max(best, 1)
+
+    # ------------------------------------------------------------- costing
+    def comp_cost(self, name: str) -> CompCost:
+        if name in self._memo:
+            return self._memo[name]
+        cost = CompCost()
+        self._memo[name] = cost  # break cycles defensively
+        for instr in self.comps.get(name, []):
+            op = instr.op
+            if op == "while":
+                body = self._called(instr, "body")
+                cond = self._called(instr, "condition")
+                trips = self._trip_count(cond) if cond else 1
+                for sub in (body, cond):
+                    if sub:
+                        c = self.comp_cost(sub)
+                        cost.flops += trips * c.flops
+                        cost.bytes += trips * c.bytes
+                        cost.coll_bytes += trips * c.coll_bytes
+                        for k, v in c.coll_by_kind.items():
+                            cost.coll_by_kind[k] = cost.coll_by_kind.get(k, 0) + trips * v
+                        for k, v in c.coll_count.items():
+                            cost.coll_count[k] = cost.coll_count.get(k, 0) + trips * v
+                continue
+            if op == "fusion":
+                called = self._called(instr, "calls")
+                b = instr.out_bytes + self._operand_bytes(instr)
+                if called:
+                    c = self.comp_cost(called)
+                    cost.flops += c.flops          # inner flops count
+                    # inner bytes do NOT (fusion stays in registers/VMEM)
+                    if self._has_dus(called):
+                        # in-place (aliased) update fusion: the big buffer
+                        # passes through untouched except the updated slice;
+                        # drop the read+write of the aliased operand.
+                        ops = [
+                            _parse_shape(self.shape_of[n])[1]
+                            for n in self._operand_names(instr)
+                            if n in self.shape_of
+                        ]
+                        aliased = max((x for x in ops
+                                       if x == instr.out_bytes), default=0)
+                        if aliased == 0 and ops:
+                            aliased = max(ops)
+                        b = max(b - 2 * aliased, instr.out_bytes // 64 + 1)
+                    elif self._has_ds(called):
+                        # fusion slicing a big (stacked-over-layers) operand:
+                        # only the slice is read — cap each oversized
+                        # operand at the fusion's output size.
+                        b = instr.out_bytes
+                        for n in self._operand_names(instr):
+                            if n in self.shape_of:
+                                ob = _parse_shape(self.shape_of[n])[1]
+                                b += min(ob, max(instr.out_bytes, 1))
+                cost.bytes += b
+                continue
+            if op in ("call", "async-start", "async-done"):
+                called = self._called(instr, "calls") or self._called(instr, "to_apply")
+                if called:
+                    c = self.comp_cost(called)
+                    cost.flops += c.flops
+                    cost.bytes += c.bytes
+                    cost.coll_bytes += c.coll_bytes
+                continue
+            if op == "conditional":
+                for attr in ("true_computation", "false_computation"):
+                    called = self._called(instr, attr)
+                    if called:
+                        c = self.comp_cost(called)
+                        cost.flops += c.flops
+                        cost.bytes += c.bytes
+                continue
+            if op in _COLLECTIVES:
+                kind = op.replace("-start", "")
+                payload = max(instr.out_bytes, self._operand_bytes(instr))
+                cost.coll_bytes += payload
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0) + payload
+                cost.coll_count[kind] = cost.coll_count.get(kind, 0) + 1
+                cost.bytes += instr.out_bytes + self._operand_bytes(instr)
+                continue
+            if op == "dot" or op == "convolution":
+                cost.flops += self._dot_flops(instr)
+                cost.bytes += instr.out_bytes + self._operand_bytes(instr)
+                continue
+            if op in ("reduce", "reduce-window"):
+                cost.flops += self._operand_bytes(instr) / 2  # ~1 flop/elem
+                cost.bytes += instr.out_bytes + self._operand_bytes(instr)
+                continue
+            if op == "sort":
+                n = max(instr.out_elems, 1)
+                cost.flops += n * max(1, int(n).bit_length())
+                cost.bytes += instr.out_bytes + self._operand_bytes(instr)
+                continue
+            if op in _ELEMENTWISE:
+                cost.flops += instr.out_elems
+                # inside fused computations these don't touch HBM; only count
+                # bytes for *top-level* elementwise ops, which XLA usually
+                # wraps in fusions anyway — so skip bytes here.
+                continue
+            if op in _ZERO_COST:
+                # slice-family ops move only their result (read + write), not
+                # their full operands — counting operands would charge a
+                # scanned layer-stack slice with the whole stack every trip.
+                if op in ("copy", "gather", "concatenate", "slice",
+                          "dynamic-slice", "reverse", "pad"):
+                    cost.bytes += 2 * instr.out_bytes
+                elif op in ("scatter", "dynamic-update-slice"):
+                    # in-place (aliased) update: read+write the updated
+                    # region only, not the whole destination buffer
+                    ops_b = self._operand_bytes(instr)
+                    upd = max(0, ops_b - instr.out_bytes)  # updates+indices
+                    cost.bytes += 2 * min(max(upd, 1), instr.out_bytes)
+                elif op == "custom-call":
+                    cost.bytes += instr.out_bytes + self._operand_bytes(instr)
+                continue
+            # unknown op: be conservative, count bytes
+            cost.bytes += instr.out_bytes
+        return cost
+
+    def entry_cost(self) -> CompCost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+
+    @property
+    def compute_seconds(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_seconds(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_seconds(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_seconds,
+                 "memory": self.memory_seconds,
+                 "collective": self.collective_seconds}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_seconds(self) -> float:
+        return max(self.compute_seconds, self.memory_seconds,
+                   self.collective_seconds)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_seconds": self.compute_seconds,
+            "memory_seconds": self.memory_seconds,
+            "collective_seconds": self.collective_seconds,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(hlo_text: str, chips: int) -> Tuple[Roofline, CompCost]:
+    model = HloCostModel(hlo_text)
+    cost = model.entry_cost()
+    roof = Roofline(
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.coll_bytes,
+        chips=chips,
+    )
+    return roof, cost

@@ -1,0 +1,76 @@
+"""Input construction per (arch x shape): concrete arrays for smoke tests,
+ShapeDtypeStructs for the dry-run (weak-type-correct, no allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.shapes import ShapeSpec
+from ..models.config import ModelConfig
+from ..models.model import Model
+
+
+def _mk(concrete: bool, shape, dtype, rng: Optional[np.random.Generator],
+        low=0, high=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    rng = rng or np.random.default_rng(0)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(rng.integers(low, high or 100, shape), dtype)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def train_batch(cfg: ModelConfig, seq_len: int, batch: int,
+                concrete: bool = False, rng=None) -> Dict[str, Any]:
+    v = cfg.vocab_size
+    if cfg.family == "encdec":
+        dec_len = max(8, seq_len // cfg.encoder_seq_ratio)
+        return {
+            "frames": _mk(concrete, (batch, seq_len, cfg.d_model), cfg.cdtype, rng),
+            "tokens": _mk(concrete, (batch, dec_len), jnp.int32, rng, high=v),
+            "targets": _mk(concrete, (batch, dec_len), jnp.int32, rng, high=v),
+        }
+    if cfg.family == "vlm":
+        text = max(8, seq_len - cfg.num_patches)
+        return {
+            "patches": _mk(concrete, (batch, cfg.num_patches, cfg.d_model),
+                           cfg.cdtype, rng),
+            "tokens": _mk(concrete, (batch, text), jnp.int32, rng, high=v),
+            "targets": _mk(concrete, (batch, text), jnp.int32, rng, high=v),
+        }
+    return {
+        "tokens": _mk(concrete, (batch, seq_len), jnp.int32, rng, high=v),
+        "targets": _mk(concrete, (batch, seq_len), jnp.int32, rng, high=v),
+    }
+
+
+def decode_inputs(model: Model, seq_len: int, batch: int,
+                  concrete: bool = False, rng=None):
+    """(token, caches, extras) for one serve_step with a full cache."""
+    cfg = model.cfg
+    token = _mk(concrete, (batch, 1), jnp.int32, rng, high=cfg.vocab_size)
+    if concrete:
+        caches = model.init_caches(batch, seq_len)
+        caches = jax.tree.map(lambda a: a, caches)
+        caches = _set_pos(caches, seq_len - 1)
+    else:
+        caches = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.eval_shape(lambda: model.init_caches(batch, seq_len)))
+    extras = {}
+    if cfg.family == "encdec":
+        extras["enc_out"] = _mk(concrete, (batch, seq_len, cfg.d_model),
+                                cfg.cdtype, rng)
+    return token, caches, extras
+
+
+def _set_pos(caches, pos: int):
+    def fix(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "pos":
+            return jnp.full(leaf.shape, pos, leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, caches)

@@ -1,0 +1,189 @@
+"""GQA attention: dense + chunked(flash-style) training paths, KV-cache
+decode, and cross-attention (enc-dec).
+
+Conventions: x (B,S,D); q (B,S,H,hd); k/v (B,S,KV,hd). GQA groups
+G = H/KV query heads per KV head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init
+from ..distributed.sharding import lshard
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    ks = jax.random.split(key, 4)
+    h, kv, d, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_model, cfg.head_dim
+    return {"attn": {
+        "wq": dense_init(ks[0], *stack, d, h, hd, dtype=cfg.pdtype),
+        "wk": dense_init(ks[1], *stack, d, kv, hd, dtype=cfg.pdtype),
+        "wv": dense_init(ks[2], *stack, d, kv, hd, dtype=cfg.pdtype),
+        "wo": dense_init(ks[3], *stack, h, hd, d, dtype=cfg.pdtype),
+    }}
+
+
+def _dense_attend(q, k, v, mask, scale):
+    """q (B,Sq,H,D), k/v (B,Sk,H,D) (kv pre-repeated to H heads: Megatron-
+    style GQA TP — scores stay head-sharded even when kv_heads < TP size).
+
+    mask: broadcastable to (B,H,Sq,Sk) or None.
+    """
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    scores = lshard(scores, "batch", "heads", None, None)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return lshard(out, "batch", "seq", "heads", None)
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,KV,D) -> (B,S,KV*G,D), sharded on the repeated head axis."""
+    if groups == 1:
+        return lshard(k, "batch", "kv_seq", "heads", None)
+    b, s, kv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, d))
+    return lshard(k.reshape(b, s, kv * groups, d),
+                  "batch", "kv_seq", "heads", None)
+
+
+def _chunked_attend(q, k, v, scale, q_offset, causal: bool, chunk: int):
+    """Flash-style online-softmax attention, scanning KV chunks per Q chunk.
+
+    q (B,Sq,H,D), k/v (B,Sk,H,D) pre-repeated. Never materializes
+    (Sq, Sk); peak score block is (B,H,Cq,Ck).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]  # may differ from d (MLA: qk 192, v 128)
+    sk = k.shape[1]
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    nq, nk = sq // cq, sk // ck
+    assert sq % cq == 0 and sk % ck == 0
+
+    def q_chunk_body(qi, q_blk):
+        # q_blk: (b, h, cq, d)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+            s = jnp.einsum("bhqd,bshd->bhqs", q_blk, k_blk).astype(jnp.float32) * scale
+            s = lshard(s, "batch", "heads", None, None)
+            if causal:
+                qpos = q_offset + qi * cq + jnp.arange(cq)
+                kpos = ki * ck + jnp.arange(ck)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(q.dtype), v_blk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)  # (b, h, cq, d)
+
+    q_blocks = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    outs = jax.lax.map(lambda args: q_chunk_body(*args),
+                       (jnp.arange(nq, dtype=jnp.int32), q_blocks))
+    # outs: (nq, b, h, cq, dv) -> (b, nq*cq, h, dv)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, dv)
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, positions=None,
+               cache: Optional[Dict] = None, causal: bool = True,
+               kv_x: Optional[jnp.ndarray] = None, use_rope: bool = True):
+    """Self/cross attention. With `cache`, x is the new-token slice and the
+    (pre-filled) cache supplies history (decode step).
+
+    cache = {"k": (B,S,KV,D), "v": (B,S,KV,D), "pos": int32 ()} — `pos` is
+    the number of valid history tokens.
+    """
+    b, sq, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    wq = p["wq"].astype(cfg.cdtype)
+    wk = p["wk"].astype(cfg.cdtype)
+    wv = p["wv"].astype(cfg.cdtype)
+    wo = p["wo"].astype(cfg.cdtype)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    src = kv_x if kv_x is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, wk)
+    v = jnp.einsum("bsd,dhk->bshk", src, wv)
+    q = lshard(q, "batch", "seq", "heads", None)
+    k = lshard(k, "batch", "kv_seq", "kv_heads", None)
+    v = lshard(v, "batch", "kv_seq", "kv_heads", None)
+
+    if positions is None:
+        positions = jnp.arange(sq)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    scale = 1.0 / np.sqrt(hd)
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": pos + sq}
+        s_total = ck.shape[1]
+        if sq >= cfg.attn_chunk_threshold:
+            # PREFILL into a cache: chunked (flash-style) over the cache
+            out = _chunked_attend(q, _repeat_kv(ck, g), _repeat_kv(cv, g),
+                                  scale, pos, True, cfg.attn_chunk_size)
+        else:
+            # decode: attend over the full cache in the GROUPED layout
+            # (reads each cached KV head once — the GQA win)
+            kpos = jnp.arange(s_total)[None, None, None, None, :]
+            qpos = (pos + jnp.arange(sq))[None, None, None, :, None]
+            mask = kpos <= qpos
+            qg = q.reshape(b, sq, kvh, g, hd)
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck).astype(jnp.float32) * scale
+            scores = jnp.where(mask, scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv).reshape(b, sq, h, hd)
+    else:
+        use_chunked = (cfg.attn_impl == "chunked" or
+                       (cfg.attn_impl == "auto" and sq >= cfg.attn_chunk_threshold))
+        k_rep = _repeat_kv(k, g)
+        v_rep = _repeat_kv(v, g)
+        if use_chunked and kv_x is None:
+            out = _chunked_attend(q, k_rep, v_rep, scale, 0, causal,
+                                  cfg.attn_chunk_size)
+        else:
+            mask = None
+            if causal and kv_x is None:
+                sk = k.shape[1]
+                mask = (jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :])[
+                    None, None, :, :]
+            out = _dense_attend(q, k_rep, v_rep, mask, scale)
+    out = lshard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return lshard(y, "batch", "seq", None), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

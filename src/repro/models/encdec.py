@@ -1,0 +1,143 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d_model). Sinusoidal
+positions on the encoder, learned positions on the decoder (extended past
+whisper's 448 to cover the assigned shapes — documented deviation),
+pre-LN blocks with GELU MLPs, no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import attention, layers
+from ..distributed.sharding import lshard
+
+
+def _sinusoid(length: int, channels: int) -> jnp.ndarray:
+    log_timescale = np.log(10_000) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(np.concatenate([np.sin(t), np.cos(t)], axis=1),
+                       jnp.float32)
+
+
+def _enc_layer_init(key, cfg: ModelConfig, stack=()):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((*stack, cfg.d_model), cfg.pdtype),
+        "ln1_b": jnp.zeros((*stack, cfg.d_model), cfg.pdtype),
+        **attention.attn_init(k1, cfg, stack=stack),
+        "ln2": jnp.ones((*stack, cfg.d_model), cfg.pdtype),
+        "ln2_b": jnp.zeros((*stack, cfg.d_model), cfg.pdtype),
+        **layers.gelu_mlp_init(k2, cfg, stack=stack),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, stack=()):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_init(key, cfg, stack)
+    cross = attention.attn_init(k3, cfg, stack=stack)
+    p["cross"] = cross["attn"]
+    p["ln_cross"] = jnp.ones((*stack, cfg.d_model), cfg.pdtype)
+    p["ln_cross_b"] = jnp.zeros((*stack, cfg.d_model), cfg.pdtype)
+    return p
+
+
+def encdec_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = layers.embed_init(ks[0], cfg)
+    p["dec_pos"] = layers.dense_init(ks[1], 1 << 16, cfg.d_model,
+                                     dtype=cfg.pdtype, scale=0.01)
+    p["enc"] = _enc_layer_init(ks[2], cfg, stack=(cfg.encoder_layers,))
+    p["dec"] = _dec_layer_init(ks[3], cfg, stack=(cfg.decoder_layers,))
+    p["enc_ln"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+    p["enc_ln_b"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+    p["dec_ln"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+    p["dec_ln_b"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+    return p
+
+
+def _enc_layer_apply(p, x, cfg):
+    h = layers.layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+    y, _ = attention.attn_apply(p["attn"], h, cfg, causal=False, use_rope=False)
+    x = x + y
+    h = layers.layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+    return x + layers.gelu_mlp_apply(p["mlp"], h, cfg)
+
+
+def _dec_layer_apply(p, x, enc_out, cfg, cache=None, positions=None):
+    h = layers.layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+    y, new_cache = attention.attn_apply(p["attn"], h, cfg, causal=True,
+                                        use_rope=False, cache=cache,
+                                        positions=positions)
+    x = x + y
+    h = layers.layer_norm(x, p["ln_cross"], p["ln_cross_b"], cfg.norm_eps)
+    y, _ = attention.attn_apply(p["cross"], h, cfg, causal=False,
+                                use_rope=False, kv_x=enc_out)
+    x = x + y
+    h = layers.layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+    return x + layers.gelu_mlp_apply(p["mlp"], h, cfg), new_cache
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, d_model) stub frontend embeddings."""
+    x = frames.astype(cfg.cdtype) + _sinusoid(frames.shape[1], cfg.d_model
+                                              ).astype(cfg.cdtype)[None]
+    x = lshard(x, "batch", "seq", None)
+
+    def step(x, layer_p):
+        return _enc_layer_apply(layer_p, x, cfg), None
+
+    body = step
+    if cfg.remat != "none":
+        body = jax.checkpoint(step)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layers.layer_norm(x, params["enc_ln"], params["enc_ln_b"], cfg.norm_eps)
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = layers.embed_apply(params, tokens, cfg)
+    x = x + params["dec_pos"][:s].astype(cfg.cdtype)[None]
+
+    def step(x, layer_p):
+        y, _ = _dec_layer_apply(layer_p, x, enc_out, cfg)
+        return y, None
+
+    body = step
+    if cfg.remat != "none":
+        body = jax.checkpoint(step)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = layers.layer_norm(x, params["dec_ln"], params["dec_ln_b"], cfg.norm_eps)
+    return layers.lm_head_apply(params, x, cfg)
+
+
+def decode_step(params, token, enc_out, caches, cfg: ModelConfig):
+    """One decode step. caches: stacked over decoder layers."""
+    b, s = token.shape
+    x = layers.embed_apply(params, token, cfg)
+    pos = caches["pos"][0]  # all layers share the same write position
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos, s, axis=0).astype(cfg.cdtype)[None]
+
+    def step(x, scanned):
+        layer_p, cache = scanned
+        y, nc = _dec_layer_apply(layer_p, x, enc_out, cfg, cache=cache,
+                                 positions=jnp.zeros((b, s), jnp.int32) + pos)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(step, x, (params["dec"], caches))
+    x = layers.layer_norm(x, params["dec_ln"], params["dec_ln_b"], cfg.norm_eps)
+    return layers.lm_head_apply(params, x, cfg), new_caches
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int):
+    one = attention.init_cache(cfg, batch, max_len)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.decoder_layers,) + a.shape), one)

@@ -1,0 +1,127 @@
+"""Shared layers: norms, RoPE, embeddings, SwiGLU MLP.
+
+Models are pairs of pure functions (init -> params pytree, apply) — no
+framework. Layer params are created *stacked over layers* where scanned.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from ..distributed.sharding import lshard
+
+
+def _init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, *shape, dtype, scale=None):
+    return _init_dense(key, shape, dtype, scale)
+
+
+def rms_norm(x, weight, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> dict:
+    p = {"embed": {"table": dense_init(key, cfg.vocab_size, cfg.d_model,
+                                       dtype=cfg.pdtype, scale=1.0)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": dense_init(jax.random.fold_in(key, 1),
+                                        cfg.d_model, cfg.vocab_size,
+                                        dtype=cfg.pdtype)}
+    return p
+
+
+def embed_apply(params, tokens, cfg: ModelConfig):
+    x = params["embed"]["table"].astype(cfg.cdtype)[tokens]
+    return lshard(x, "batch", "seq", None)
+
+
+def lm_head_apply(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(cfg.cdtype).T
+    else:
+        w = params["lm_head"]["w"].astype(cfg.cdtype)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return lshard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (llama-family) and GELU MLP (whisper)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             stack: Tuple[int, ...] = ()) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mlp": {
+        "w_gate": dense_init(ks[0], *stack, cfg.d_model, d_ff, dtype=cfg.pdtype),
+        "w_up": dense_init(ks[1], *stack, cfg.d_model, d_ff, dtype=cfg.pdtype),
+        "w_down": dense_init(ks[2], *stack, d_ff, cfg.d_model, dtype=cfg.pdtype),
+    }}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    w_gate = p["w_gate"].astype(cfg.cdtype)
+    w_up = p["w_up"].astype(cfg.cdtype)
+    w_down = p["w_down"].astype(cfg.cdtype)
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = lshard(h, "batch", "seq", "ffn")
+    return lshard(h @ w_down, "batch", "seq", None)
+
+
+def gelu_mlp_init(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"mlp": {
+        "w_up": dense_init(ks[0], *stack, cfg.d_model, cfg.d_ff, dtype=cfg.pdtype),
+        "w_down": dense_init(ks[1], *stack, cfg.d_ff, cfg.d_model, dtype=cfg.pdtype),
+        "b_up": jnp.zeros((*stack, cfg.d_ff), cfg.pdtype),
+        "b_down": jnp.zeros((*stack, cfg.d_model), cfg.pdtype),
+    }}
+
+
+def gelu_mlp_apply(p, x, cfg: ModelConfig):
+    h = jax.nn.gelu(x @ p["w_up"].astype(cfg.cdtype) + p["b_up"].astype(cfg.cdtype))
+    h = lshard(h, "batch", "seq", "ffn")
+    return h @ p["w_down"].astype(cfg.cdtype) + p["b_down"].astype(cfg.cdtype)

@@ -1,0 +1,136 @@
+"""Mamba (S6) selective-SSM block — the "1" in Jamba's 1:7 attn:mamba mix.
+
+Training uses a chunked scan: an outer lax.scan over sequence chunks
+carries the (B, D_inner, N) state; within a chunk the linear recurrence
+h_t = a_t * h_{t-1} + b_t is solved with an associative scan, so the
+materialized working set is (B, chunk, D_inner, N) — sharded over batch
+and (via TP on D_inner) the model axis. Decode is the O(1) single-step
+recurrence (why the hybrid runs the long_500k shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init
+from ..distributed.sharding import lshard
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_init(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    din = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (din, 1))
+    a_log = jnp.log(a)
+    if stack:
+        a_log = jnp.broadcast_to(a_log, (*stack, din, n))
+    return {"mamba": {
+        "w_in": dense_init(ks[0], *stack, d, din, dtype=cfg.pdtype),
+        "w_z": dense_init(ks[1], *stack, d, din, dtype=cfg.pdtype),
+        "conv": dense_init(ks[2], *stack, cfg.mamba_d_conv, din, dtype=cfg.pdtype),
+        "w_b": dense_init(ks[3], *stack, din, n, dtype=cfg.pdtype),
+        "w_c": dense_init(ks[4], *stack, din, n, dtype=cfg.pdtype),
+        "w_dt": dense_init(ks[5], *stack, din, r, dtype=cfg.pdtype),
+        "w_dt_out": dense_init(ks[6], *stack, r, din, dtype=cfg.pdtype),
+        "dt_bias": jnp.full((*stack, din), -4.6, cfg.pdtype),  # softplus^-1(0.01)
+        "a_log": a_log.astype(cfg.pdtype),
+        "d_skip": jnp.ones((*stack, din), cfg.pdtype),
+        "w_out": dense_init(ks[7], *stack, din, d, dtype=cfg.pdtype),
+    }}
+
+
+def _causal_conv(u, conv_w, state=None):
+    """Depthwise causal conv along seq. u (B,S,Din), conv_w (K,Din)."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state
+    u_ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(u_ext[:, i : i + u.shape[1], :] * conv_w[i] for i in range(k))
+    new_state = u_ext[:, -(k - 1):, :] if k > 1 else None
+    return out, new_state
+
+
+def _ssm_params(p, u, cfg: ModelConfig):
+    """Selective parameters from the (post-conv) inner activations."""
+    bmat = u @ p["w_b"].astype(cfg.cdtype)                     # (B,S,N)
+    cmat = u @ p["w_c"].astype(cfg.cdtype)                     # (B,S,N)
+    dt = (u @ p["w_dt"].astype(cfg.cdtype)) @ p["w_dt_out"].astype(cfg.cdtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,Din)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (Din,N)
+    da = jnp.exp(dt[..., None] * a)                            # (B,S,Din,N)
+    db = dt[..., None] * bmat[:, :, None, :]                   # (B,S,Din,N)
+    return da, db, cmat
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, cache: Optional[Dict] = None):
+    b, s, d = x.shape
+    u = x @ p["w_in"].astype(cfg.cdtype)
+    z = x @ p["w_z"].astype(cfg.cdtype)
+    u = lshard(u, "batch", "seq", "ffn")
+    conv_w = p["conv"].astype(cfg.cdtype)
+
+    if cache is not None:
+        u, conv_state = _causal_conv(u, conv_w, cache["conv"])
+        u = jax.nn.silu(u)
+        da, db, cmat = _ssm_params(p, u, cfg)
+        h = cache["h"] * da[:, 0] + db[:, 0] * u[:, 0, :, None].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"h": h, "conv": conv_state}
+        y = y.astype(x.dtype) + u * p["d_skip"].astype(cfg.cdtype)
+    else:
+        u, _ = _causal_conv(u, conv_w)
+        u = jax.nn.silu(u)
+        chunk = min(cfg.mamba_chunk, s)
+        assert s % chunk == 0
+        nc = s // chunk
+
+        def chunk_step(h0, inputs):
+            uc, xc = inputs                       # (B,chunk,Din), (B,chunk,d)
+            da, db, cmat = _ssm_params(p, uc, cfg)
+            bx = db * uc[..., None].astype(jnp.float32)
+
+            def combine(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return a1 * a2, b1 * a2 + b2
+
+            a_cum, b_scan = jax.lax.associative_scan(combine, (da, bx), axis=1)
+            h = b_scan + a_cum * h0[:, None]      # fold in the carry
+            yc = jnp.einsum("bsdn,bsn->bsd", h, cmat.astype(jnp.float32))
+            return h[:, -1], yc.astype(x.dtype)
+
+        u_c = u.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+        x_c = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        h0 = jnp.zeros((b, u.shape[-1], cfg.mamba_d_state), jnp.float32)
+        _, ys = jax.lax.scan(chunk_step, h0, (u_c, x_c))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, -1)
+        y = y + u * p["d_skip"].astype(cfg.cdtype)
+        new_cache = None
+
+    y = y * jax.nn.silu(z)
+    y = lshard(y, "batch", "seq", "ffn")
+    out = y @ p["w_out"].astype(cfg.cdtype)
+    return lshard(out, "batch", "seq", None), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    din = cfg.mamba_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, din, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, din), dtype),
+    }

@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are low-rank compressed; RoPE is decoupled into a small
+per-head rope sub-dim (queries) plus one shared rope key channel. The
+decode path caches only the compressed latent ``c_kv`` (+ shared rope key)
+— the MLA memory win — and uses the absorbed-weight trick: scores and
+values are computed in the latent space, so per-step decode FLOPs are
+O(S * (kv_rank + rope_dim) * H) instead of O(S * H * head_dim * 2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, rms_norm
+from ..distributed.sharding import lshard
+
+
+def mla_init(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    return {"attn": {
+        "w_dq": dense_init(ks[0], *stack, d, qr, dtype=cfg.pdtype),
+        "q_norm": jnp.zeros((*stack, qr), cfg.pdtype),
+        "w_uq": dense_init(ks[1], *stack, qr, h, dn + dr, dtype=cfg.pdtype),
+        "w_dkv": dense_init(ks[2], *stack, d, kvr, dtype=cfg.pdtype),
+        "kv_norm": jnp.zeros((*stack, kvr), cfg.pdtype),
+        "w_kr": dense_init(ks[3], *stack, d, dr, dtype=cfg.pdtype),
+        "w_ukv": dense_init(ks[4], *stack, kvr, h, dn + dv, dtype=cfg.pdtype),
+        "wo": dense_init(ks[5], *stack, h, dv, d, dtype=cfg.pdtype),
+    }}
+
+
+def _project_q(p, x, cfg: ModelConfig, positions):
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    cq = x @ p["w_dq"].astype(cfg.cdtype)
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cfg.cdtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
+              cache: Optional[Dict] = None):
+    """Training/prefill path (expanded keys/values) or decode (absorbed)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    c_kv = x @ p["w_dkv"].astype(cfg.cdtype)                    # (B,S,kvr)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = (x @ p["w_kr"].astype(cfg.cdtype))[:, :, None, :]  # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        q_nope, q_rope = _project_q(p, x, cfg, positions)
+        kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_ukv"].astype(cfg.cdtype))
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+                  + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+        scores = scores.astype(jnp.float32) * scale
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+        new_cache = None
+    elif s >= cfg.attn_chunk_threshold:
+        # PREFILL into the latent cache: expand k/v once, chunked attention
+        from .attention import _chunked_attend, _repeat_kv
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, axis=1)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
+        q_nope, q_rope = _project_q(p, x, cfg, pos + positions)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kv = jnp.einsum("bsr,rhk->bshk", cc, p["w_ukv"].astype(cfg.cdtype))
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        s_total = cc.shape[1]
+        cr_b = jnp.broadcast_to(cr[:, :, None, :], (b, s_total, h, dr))
+        k_full = jnp.concatenate([k_nope, cr_b], axis=-1)
+        out = _chunked_attend(q_full, k_full, v, scale, pos, True,
+                              cfg.attn_chunk_size)
+    else:
+        # absorbed decode: score/value in the latent space
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, axis=1)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
+        q_nope, q_rope = _project_q(p, x, cfg, pos + positions)
+        w_uk = p["w_ukv"].astype(cfg.cdtype)[..., :dn]          # (kvr,h,dn)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)      # (B,s,h,kvr)
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, cc)
+                  + jnp.einsum("bqhd,bsd->bhqs", q_rope, cr))
+        scores = scores.astype(jnp.float32) * scale
+        s_total = cc.shape[1]
+        mask = (pos + jnp.arange(s))[:, None] >= jnp.arange(s_total)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc)       # latent values
+        w_uv = p["w_ukv"].astype(cfg.cdtype)[..., dn:]          # (kvr,h,dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv)
+
+    out = lshard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshd,hdk->bsk", out, p["wo"].astype(cfg.cdtype))
+    return lshard(y, "batch", "seq", None), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,159 @@
+"""Model facade: build any assigned architecture from its ModelConfig.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.apply(params, batch)          # training fwd
+    loss, metrics = model.loss(params, batch)
+    caches = model.init_caches(batch_size, max_len)   # serving
+    logits, caches = model.decode_step(params, token, caches, extras)
+
+Batch dict:  tokens (B,S) int32, targets (B,S) int32, and per modality:
+  frames  (B, S_enc, d_model)  — whisper stub frontend
+  patches (B, P, d_model)      — internvl stub ViT
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec, layers, transformer
+from ..distributed.sharding import lshard
+
+
+def cross_entropy(logits, targets, vocab: int):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean(), lse
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    apply: Callable          # (params, batch) -> (logits, aux_dict)
+    loss: Callable           # (params, batch) -> (loss, metrics)
+    init_caches: Callable    # (batch, max_len) -> caches
+    prefill: Callable        # (params, batch, caches) -> (logits, caches)
+    decode_step: Callable    # (params, token, caches, batch) -> (logits, caches)
+
+
+def _decoder_only_model(cfg: ModelConfig) -> Model:
+    stack = transformer.Stack.build(cfg)
+
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        params = layers.embed_init(k1, cfg)
+        params["layers"] = stack.init(k2)
+        params["final_norm"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+        if cfg.mtp:
+            params["mtp"] = transformer._layer_init(
+                k3, ("mla" if cfg.use_mla else "attn", "mlp"), cfg)
+            params["mtp_proj"] = layers.dense_init(
+                jax.random.fold_in(k3, 1), 2 * cfg.d_model, cfg.d_model,
+                dtype=cfg.pdtype)
+        return params
+
+    def _backbone(params, tokens, extra_embed=None, caches=None, positions=None):
+        x = layers.embed_apply(params, tokens, cfg)
+        if extra_embed is not None:
+            x = jnp.concatenate([extra_embed.astype(cfg.cdtype), x], axis=1)
+        x, new_caches, aux, dropped = stack.apply(params["layers"], x,
+                                                  positions=positions,
+                                                  caches=caches)
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_caches, aux, dropped
+
+    def apply(params, batch):
+        extra = batch.get("patches")
+        x, _, aux, dropped = _backbone(params, batch["tokens"], extra)
+        if extra is not None:
+            x = x[:, extra.shape[1]:]
+        logits = layers.lm_head_apply(params, x, cfg)
+        aux_d = {"moe_aux": aux, "moe_dropped": dropped}
+        if cfg.mtp:
+            # multi-token prediction: fuse h_t with emb(t+1) -> predict t+2
+            emb_next = layers.embed_apply(params, batch["targets"], cfg)
+            fused = jnp.concatenate([x, emb_next], axis=-1) @ \
+                params["mtp_proj"].astype(cfg.cdtype)
+            h_mtp, _, _, _ = transformer._layer_apply(
+                params["mtp"], fused, ("mla" if cfg.use_mla else "attn", "mlp"), cfg)
+            aux_d["mtp_logits"] = layers.lm_head_apply(params, h_mtp, cfg)
+        return logits, aux_d
+
+    def loss(params, batch):
+        logits, aux = apply(params, batch)
+        ce, lse = cross_entropy(logits, batch["targets"], cfg.vocab_size)
+        total = ce + 1e-2 * aux["moe_aux"] + 1e-4 * jnp.mean(lse ** 2)
+        metrics = {"ce": ce, "moe_aux": aux["moe_aux"],
+                   "moe_dropped": aux["moe_dropped"]}
+        if cfg.mtp:
+            # targets for t+2 = targets shifted by one; mask the tail
+            t2 = jnp.roll(batch["targets"], -1, axis=1)
+            mtp_ce, _ = cross_entropy(aux["mtp_logits"][:, :-1], t2[:, :-1],
+                                      cfg.vocab_size)
+            total = total + 0.3 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        return total, metrics
+
+    def init_caches(batch, max_len):
+        return stack.init_caches(batch, max_len)
+
+    def prefill(params, batch, caches):
+        # teacher-forced prefill that fills caches token-block at once is
+        # family-specific; for serving benchmarks we run apply() and then
+        # decode from caches filled by a scan of decode steps when needed.
+        tokens = batch["tokens"]
+        x, new_caches, _, _ = _backbone(params, tokens, batch.get("patches"),
+                                        caches=caches)
+        logits = layers.lm_head_apply(params, x[:, -1:], cfg)
+        return logits, new_caches
+
+    def decode_step(params, token, caches, batch=None):
+        positions = None
+        x, new_caches, _, _ = _backbone(params, token, None, caches=caches,
+                                        positions=positions)
+        logits = layers.lm_head_apply(params, x, cfg)
+        return logits, new_caches
+
+    return Model(cfg, init, apply, loss, init_caches, prefill, decode_step)
+
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return encdec.encdec_init(rng, cfg)
+
+    def apply(params, batch):
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits = encdec.decode_train(params, batch["tokens"], enc_out, cfg)
+        return logits, {"moe_aux": jnp.zeros(()), "moe_dropped": jnp.zeros((), jnp.int32)}
+
+    def loss(params, batch):
+        logits, _ = apply(params, batch)
+        ce, _ = cross_entropy(logits, batch["targets"], cfg.vocab_size)
+        return ce, {"ce": ce}
+
+    def init_caches(batch, max_len):
+        return encdec.init_dec_caches(cfg, batch, max_len)
+
+    def prefill(params, batch, caches):
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits, caches = encdec.decode_step(params, batch["tokens"][:, -1:],
+                                            enc_out, caches, cfg)
+        return logits, caches
+
+    def decode_step(params, token, caches, batch):
+        enc_out = batch["enc_out"]
+        return encdec.decode_step(params, token, enc_out, caches, cfg)
+
+    return Model(cfg, init, apply, loss, init_caches, prefill, decode_step)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _encdec_model(cfg)
+    return _decoder_only_model(cfg)

@@ -1,0 +1,168 @@
+"""RWKV-6 "Finch" block: token shift + data-dependent decay linear attention.
+
+Per head of size D, the state S (D_k x D_v) evolves as
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with the decay w_t produced from the shifted input through a LoRA (the
+"data-dependent decay" that distinguishes Finch from RWKV-5). Training
+scans chunks (inner step is cheap; the state, not the sequence, is the
+carry), decode is O(1) — hence this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+from ..distributed.sharding import lshard
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_init(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 10)
+    return {"rwkv": {
+        "mu": jnp.full((*stack, 5, d), 0.5, cfg.pdtype),  # shift mixes r,k,v,w,g
+        "w_r": dense_init(ks[0], *stack, d, d, dtype=cfg.pdtype),
+        "w_k": dense_init(ks[1], *stack, d, d, dtype=cfg.pdtype),
+        "w_v": dense_init(ks[2], *stack, d, d, dtype=cfg.pdtype),
+        "w_g": dense_init(ks[3], *stack, d, d, dtype=cfg.pdtype),
+        "w_o": dense_init(ks[4], *stack, d, d, dtype=cfg.pdtype),
+        "w_decay_lora_a": dense_init(ks[5], *stack, d, lora, dtype=cfg.pdtype),
+        "w_decay_lora_b": dense_init(ks[6], *stack, lora, d, dtype=cfg.pdtype),
+        "decay_base": jnp.full((*stack, d), -6.0, cfg.pdtype),
+        "bonus": jnp.zeros((*stack, d), cfg.pdtype),
+        "ln_x": jnp.ones((*stack, d), cfg.pdtype),
+    }}
+
+
+def _shift(x, last):
+    """x_{t-1} stream: prepend `last` (zeros or cache) and drop the tail."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _chunked_wkv(r, k, v, w, u, s0, chunk: int):
+    """Chunked WKV (§Perf optimization — GLA-style parallel form).
+
+    Per chunk of length C the recurrence splits into an inter-chunk term
+    (carry state S, decayed by the running product of w), an intra-chunk
+    strictly-causal attention with decay-ratio weights, and the current-
+    token bonus. Log-space cumulative decays with per-chunk centering keep
+    everything in f32 range; the C x C weight matrix is a plain matmul
+    (MXU-friendly). State HBM traffic drops from T writes to T/C writes,
+    which is the point (see EXPERIMENTS.md §Perf / rwkv row).
+
+    Shapes: r/k/v (B,S,H,D) f32, w (B,S,H,D) decay in (0,1),
+    u (H,D) bonus, s0 (B,H,D,D). Returns (state, y (B,S,H*D)).
+    """
+    b, s, h, dd = r.shape
+    c = chunk
+    n = s // c
+    rc = r.reshape(b, n, c, h, dd)
+    kc = k.reshape(b, n, c, h, dd)
+    vc = v.reshape(b, n, c, h, dd)
+    logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-8, 1.0)
+                   ).reshape(b, n, c, h, dd)
+
+    causal = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def chunk_step(state, inp):
+        rr, kk, vv, lw = inp                     # (B,C,H,D)
+        cum = jnp.cumsum(lw, axis=1)             # inclusive logW_t
+        cum_prev = cum - lw                      # exclusive logW_{t-1}
+        total = cum[:, -1:]                      # logW_end
+        center = 0.5 * total
+        r_t = rr * jnp.exp(cum_prev - center)    # bounded by exp(|range|/2)
+        k_t = kk * jnp.exp(center - cum)
+        a = jnp.einsum("bthd,bjhd->bhtj", r_t, k_t)
+        a = jnp.where(causal[None, None], a, 0.0)
+        y_intra = jnp.einsum("bhtj,bjhd->bthd", a, vv)
+        # current-token bonus
+        bonus = jnp.einsum("bthd,bthd->bth", rr, u[None, None] * kk)
+        y_intra = y_intra + bonus[..., None] * vv
+        # inter-chunk: y += (r ⊙ W_{t-1}) @ S
+        r_in = rr * jnp.exp(cum_prev)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", r_in, state)
+        # state update: S' = diag(W_end) S + Σ_j diag(W_end/W_j) k_j^T v_j
+        k_dec = kk * jnp.exp(total - cum)
+        state = (state * jnp.exp(total[:, 0])[..., None]
+                 + jnp.einsum("bjhk,bjhv->bhkv", k_dec, vv))
+        return state, y_intra + y_inter
+
+    xs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rc, kc, vc, logw))
+    state, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h * dd)
+    return state, y
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def rwkv_apply(p, x, cfg: ModelConfig, *, cache: Optional[Dict] = None):
+    b, s, d = x.shape
+    h = _heads(cfg)
+    hd = cfg.rwkv_head_dim
+    last = cache["x_prev"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xp = _shift(x, last)
+    mu = p["mu"].astype(cfg.cdtype)
+    xr = _mix(x, xp, mu[0])
+    xk = _mix(x, xp, mu[1])
+    xv = _mix(x, xp, mu[2])
+    xw = _mix(x, xp, mu[3])
+    xg = _mix(x, xp, mu[4])
+
+    r = (xr @ p["w_r"].astype(cfg.cdtype)).reshape(b, s, h, hd)
+    k = (xk @ p["w_k"].astype(cfg.cdtype)).reshape(b, s, h, hd)
+    v = (xv @ p["w_v"].astype(cfg.cdtype)).reshape(b, s, h, hd)
+    g = xg @ p["w_g"].astype(cfg.cdtype)
+    decay = (xw @ p["w_decay_lora_a"].astype(cfg.cdtype)
+             ) @ p["w_decay_lora_b"].astype(cfg.cdtype)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)
+                         + p["decay_base"].astype(jnp.float32)))
+    w = w.reshape(b, s, h, hd)
+    u = p["bonus"].astype(jnp.float32).reshape(h, hd)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    s0 = (cache["state"] if cache is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+    if cache is None and cfg.rwkv_impl == "chunked" and s % cfg.rwkv_chunk == 0:
+        state, ys = _chunked_wkv(r32, k32, v32, w, u, s0, cfg.rwkv_chunk)
+        y = ys.reshape(b, s, d)
+    else:
+        def step(state, inp):
+            rt, kt, vt, wt = inp                       # (B,H,hd) each
+            kv = kt[..., :, None] * vt[..., None, :]   # (B,H,hd,hd)
+            y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[..., None] * kv)
+            state = state * wt[..., None] + kv
+            return state, y
+
+        xs = (r32.transpose(1, 0, 2, 3), k32.transpose(1, 0, 2, 3),
+              v32.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+        state, ys = jax.lax.scan(step, s0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    y = rms_norm(y.astype(cfg.cdtype), p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    out = y @ p["w_o"].astype(cfg.cdtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "x_prev": x[:, -1, :]}
+    return lshard(out, "batch", "seq", None), new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), dtype),
+    }

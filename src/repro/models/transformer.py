@@ -1,0 +1,251 @@
+"""Decoder-only transformer assembly for dense / moe / hybrid / ssm archs.
+
+Layers are grouped into (prefix, repeating unit): the prefix is unrolled,
+the repeating unit is stacked and lax.scan-ned (small HLO even at 80
+layers; remat applies per scanned unit). Layer kinds:
+
+  mixer: "attn" | "mla" | "mamba" | "rwkv"
+  ffn:   "mlp"  | "moe"
+
+e.g. deepseek-v3 = prefix of 3 (mla+mlp) + 58x (mla+moe) scanned;
+jamba = 9x scanned unit of 8 sublayers [7 mamba + 1 attn, alternating moe].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import attention, layers, mamba, mla, moe, rwkv
+from ..distributed.sharding import lshard
+
+LayerSpec = Tuple[str, str]  # (mixer_kind, ffn_kind)
+
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    specs = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            mixer = "rwkv"
+        elif cfg.family == "hybrid" and not cfg.is_attn_layer(i):
+            mixer = "mamba"
+        elif cfg.use_mla:
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+        specs.append((mixer, ffn))
+    return specs
+
+
+def split_prefix_unit(specs: List[LayerSpec]) -> Tuple[List[LayerSpec], List[LayerSpec], int]:
+    """Minimal (prefix, unit, n_repeat) with tail = unit * n_repeat."""
+    n = len(specs)
+    for prefix_len in range(0, min(8, n)):
+        tail = specs[prefix_len:]
+        for unit_len in (1, 2, 4, 8, 16):
+            if len(tail) % unit_len:
+                continue
+            unit = tail[:unit_len]
+            if all(tail[i] == unit[i % unit_len] for i in range(len(tail))):
+                return specs[:prefix_len], unit, len(tail) // unit_len
+    return specs, [], 0  # fully unrolled fallback
+
+
+_MIXER_INIT = {"attn": attention.attn_init, "mla": mla.mla_init,
+               "mamba": mamba.mamba_init, "rwkv": rwkv.rwkv_init}
+
+
+def _ffn_init(kind):
+    return moe.moe_init if kind == "moe" else layers.mlp_init
+
+
+def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, stack=()):
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p = {"pre_norm": jnp.zeros((*stack, cfg.d_model), cfg.pdtype)}
+    p.update(_MIXER_INIT[mixer](k1, cfg, stack=stack))
+    if mixer in ("attn", "mla"):
+        p["post_norm"] = jnp.zeros((*stack, cfg.d_model), cfg.pdtype)
+        if ffn == "moe":
+            p.update(moe.moe_init(k2, cfg, stack=stack))
+        else:
+            p.update(layers.mlp_init(k2, cfg, stack=stack))
+    else:
+        # mamba/rwkv blocks in jamba/rwkv6 carry their own ffn sublayer
+        p["post_norm"] = jnp.zeros((*stack, cfg.d_model), cfg.pdtype)
+        if ffn == "moe":
+            p.update(moe.moe_init(k2, cfg, stack=stack))
+        else:
+            p.update(layers.mlp_init(k2, cfg, stack=stack))
+    return p
+
+
+def _layer_apply(p, x, spec: LayerSpec, cfg: ModelConfig, *, positions=None,
+                 cache=None):
+    mixer, ffn = spec
+    h = layers.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if mixer == "attn":
+        y, new_cache = attention.attn_apply(p["attn"], h, cfg,
+                                            positions=positions, cache=cache)
+    elif mixer == "mla":
+        y, new_cache = mla.mla_apply(p["attn"], h, cfg, positions=positions,
+                                     cache=cache)
+    elif mixer == "mamba":
+        y, new_cache = mamba.mamba_apply(p["mamba"], h, cfg, cache=cache)
+    else:
+        y, new_cache = rwkv.rwkv_apply(p["rwkv"], h, cfg, cache=cache)
+    x = x + y
+    h = layers.rms_norm(x, p["post_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    dropped = jnp.zeros((), jnp.int32)
+    if ffn == "moe":
+        y, aux, dropped = moe.moe_apply(p["moe"], h, cfg)
+    else:
+        y = layers.mlp_apply(p["mlp"], h, cfg)
+    return x + y, new_cache, aux, dropped
+
+
+@dataclasses.dataclass
+class Stack:
+    """Prefix/unit decomposition with init/apply for the layer stack."""
+
+    cfg: ModelConfig
+    prefix: List[LayerSpec]
+    unit: List[LayerSpec]
+    n_repeat: int
+
+    @staticmethod
+    def build(cfg: ModelConfig) -> "Stack":
+        prefix, unit, n_repeat = split_prefix_unit(layer_specs(cfg))
+        return Stack(cfg, prefix, unit, n_repeat)
+
+    @property
+    def num_layers(self):
+        return len(self.prefix) + len(self.unit) * self.n_repeat
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        p = {"prefix": [], "unit": []}
+        for i, spec in enumerate(self.prefix):
+            p["prefix"].append(_layer_init(jax.random.fold_in(key, i), spec, cfg))
+        for j, spec in enumerate(self.unit):
+            stack = (self.n_repeat,) if cfg.scan_layers else ()
+            if cfg.scan_layers:
+                p["unit"].append(_layer_init(
+                    jax.random.fold_in(key, 100 + j), spec, cfg,
+                    stack=(self.n_repeat,)))
+            else:
+                p["unit"].append([
+                    _layer_init(jax.random.fold_in(key, 100 + j * 1000 + r),
+                                spec, cfg)
+                    for r in range(self.n_repeat)])
+        return p
+
+    def apply(self, p, x, *, positions=None, caches=None):
+        """caches: {"prefix": [cache...], "unit": [stacked cache...]} or None."""
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        dropped_total = jnp.zeros((), jnp.int32)
+        new_caches = {"prefix": [], "unit": []} if caches is not None else None
+
+        for i, spec in enumerate(self.prefix):
+            c = caches["prefix"][i] if caches is not None else None
+            x, nc, aux, dr = _layer_apply(p["prefix"][i], x, spec, cfg,
+                                          positions=positions, cache=c)
+            aux_total += aux
+            dropped_total += dr
+            if caches is not None:
+                new_caches["prefix"].append(nc)
+
+        if self.n_repeat == 0:
+            return x, new_caches, aux_total, dropped_total
+
+        def unit_body(x, unit_params, unit_caches):
+            ncs = []
+            aux_u = jnp.zeros((), jnp.float32)
+            dr_u = jnp.zeros((), jnp.int32)
+            for j, spec in enumerate(self.unit):
+                c = unit_caches[j] if unit_caches is not None else None
+                x, nc, aux, dr = _layer_apply(unit_params[j], x, spec, cfg,
+                                              positions=positions, cache=c)
+                aux_u += aux
+                dr_u += dr
+                ncs.append(nc)
+            return x, ncs, aux_u, dr_u
+
+        if cfg.remat == "full":
+            unit_body = jax.checkpoint(unit_body,
+                                       static_argnums=())  # type: ignore
+        elif cfg.remat == "selective":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            unit_body = jax.checkpoint(unit_body, policy=policy)  # type: ignore
+
+        if cfg.scan_layers:
+            def scan_step(carry, scanned):
+                x, aux_t, dr_t = carry
+                u_params, u_caches = scanned
+                x, ncs, aux_u, dr_u = unit_body(x, u_params, u_caches)
+                return (x, aux_t + aux_u, dr_t + dr_u), ncs
+
+            scanned_caches = caches["unit"] if caches is not None else [None] * len(self.unit)
+            if caches is None:
+                scanned_in = (p["unit"], [None] * len(self.unit))
+                # lax.scan can't scan None leaves; use a dummy zero per slot
+                scanned_in = (p["unit"],
+                              [jnp.zeros((self.n_repeat,), jnp.int32)
+                               for _ in self.unit])
+
+                def scan_step_nc(carry, scanned):
+                    x, aux_t, dr_t = carry
+                    u_params, _ = scanned
+                    x, _, aux_u, dr_u = unit_body(x, u_params, None)
+                    return (x, aux_t + aux_u, dr_t + dr_u), jnp.zeros((), jnp.int32)
+
+                (x, aux_total, dropped_total), _ = jax.lax.scan(
+                    scan_step_nc, (x, aux_total, dropped_total), scanned_in)
+            else:
+                (x, aux_total, dropped_total), ncs = jax.lax.scan(
+                    scan_step, (x, aux_total, dropped_total),
+                    (p["unit"], scanned_caches))
+                new_caches["unit"] = ncs
+        else:
+            for r in range(self.n_repeat):
+                u_params = [p["unit"][j][r] for j in range(len(self.unit))]
+                u_caches = ([caches["unit"][j][r] for j in range(len(self.unit))]
+                            if caches is not None else None)
+                x, ncs, aux_u, dr_u = unit_body(x, u_params, u_caches)
+                aux_total += aux_u
+                dropped_total += dr_u
+                if caches is not None:
+                    new_caches["unit"].append(ncs)
+        return x, new_caches, aux_total, dropped_total
+
+    def init_caches(self, batch: int, max_len: int):
+        """Stacked caches matching apply()'s scan layout."""
+        cfg = self.cfg
+
+        def one(spec: LayerSpec):
+            mixer, _ = spec
+            if mixer == "attn":
+                return attention.init_cache(cfg, batch, max_len)
+            if mixer == "mla":
+                return mla.init_mla_cache(cfg, batch, max_len)
+            if mixer == "mamba":
+                return mamba.init_mamba_cache(cfg, batch)
+            return rwkv.init_rwkv_cache(cfg, batch)
+
+        caches = {"prefix": [one(s) for s in self.prefix], "unit": []}
+        if cfg.scan_layers:
+            caches["unit"] = [
+                jax.tree.map(lambda a: jnp.broadcast_to(a, (self.n_repeat,) + a.shape),
+                             one(s))
+                for s in self.unit]
+        else:
+            caches["unit"] = [[one(s) for _ in range(self.n_repeat)]
+                              for s in self.unit]
+        return caches

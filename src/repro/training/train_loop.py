@@ -1,0 +1,91 @@
+"""Train step: value_and_grad + AdamW, with microbatch gradient
+accumulation (lax.scan), optional int8 gradient compression with error
+feedback, and reduce-scatter-friendly mean-grad semantics.
+
+Under jit-with-shardings (GSPMD) the data-parallel gradient all-reduce is
+inserted by XLA from the sharding constraints; the compression path makes
+the quantize/dequantize explicit around a shard_map psum so the wire bytes
+really shrink (tests/test_training.py checks convergence parity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+from .compression import compressed_psum_grads
+from ..models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptimizerConfig = OptimizerConfig()
+    grad_accum: int = 1           # microbatches per step
+    compress_grads: bool = False  # int8 + error feedback DP sync
+    compress_axis: Optional[str] = None  # mesh axis for explicit psum
+
+
+def init_train_state(model: Model, rng, tcfg: TrainConfig) -> Dict[str, Any]:
+    params = model.init(rng)
+    state = {
+        "params": params,
+        "opt": init_opt_state(tcfg.opt, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.compress_grads:
+        state["error_fb"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics). Jit outside."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        n = tcfg.grad_accum
+
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), b)
+
+        def acc_step(carry, mb):
+            loss_a, grads_a = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads_a = jax.tree.map(jnp.add, grads_a, grads)
+            return (loss_a + loss, grads_a), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), metrics = jax.lax.scan(
+            acc_step, (jnp.zeros(()), zeros), micro(batch))
+        grads = jax.tree.map(lambda g: g / n, grads_sum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / n, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        if tcfg.compress_grads:
+            grads, new_efb = compressed_psum_grads(
+                grads, state["error_fb"], axis=tcfg.compress_axis)
+        new_params, new_opt, opt_metrics = adamw_update(
+            tcfg.opt, state["params"], grads, state["opt"])
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if tcfg.compress_grads:
+            new_state["error_fb"] = new_efb
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out
+
+    return train_step

@@ -1,0 +1,64 @@
+"""Subprocess worker: distributed HDB on N host devices must match the
+single-device reference exactly. Invoked by test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 set in the child env.
+"""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import blocks, hdb, distributed
+from repro.data import synthetic
+
+
+def key_set(r):
+    return set(zip(r.rids.tolist(), r.key_hi.tolist(), r.key_lo.tolist()))
+
+
+def main(mesh_kind: str):
+    corpus = synthetic.generate(synthetic.SyntheticSpec(num_entities=900, seed=11))
+    keys, valid = blocks.build_keys(corpus.columns, corpus.blocking)
+    # pad N to a multiple of 8 shards
+    n = valid.shape[0]
+    import jax.numpy as jnp
+    pad = (-n) % 8
+    if pad:
+        keys = jnp.concatenate(
+            [keys, jnp.full((pad,) + keys.shape[1:], 0xFFFFFFFF, jnp.uint32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad, valid.shape[1]), bool)])
+    cfg = hdb.HDBConfig(max_block_size=40, max_iterations=5)
+    ref = hdb.hashed_dynamic_blocking(keys, valid, cfg)
+
+    if mesh_kind == "flat":
+        mesh = jax.make_mesh((8,), ("data",))
+        axes = ("data",)
+    elif mesh_kind == "pod":
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        axes = ("pod", "data")
+    else:  # production-style 3-axis
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        axes = ("pod", "data", "model")
+    got = distributed.distributed_hashed_dynamic_blocking(
+        keys, valid, cfg, mesh, axes)
+
+    ks_ref, ks_got = key_set(ref), key_set(got)
+    missing = ks_ref - ks_got
+    extra = ks_got - ks_ref
+    print(f"ref={len(ks_ref)} got={len(ks_got)} missing={len(missing)} extra={len(extra)}")
+    assert len(ks_ref) > 1000, "reference produced too few assignments to be a real test"
+    assert not extra, f"distributed produced spurious assignments: {list(extra)[:5]}"
+    # bloom false positives may drop assignments; with FPR ~1e-8 expect zero
+    assert len(missing) <= 2, f"too many missing: {list(missing)[:5]}"
+    for st_r, st_g in zip(ref.stats, got.stats):
+        assert st_r.n_surviving_oversized == st_g.n_surviving_oversized, (st_r, st_g)
+        assert st_r.n_right_cms == st_g.n_right_cms, (st_r, st_g)
+    print("OK", mesh_kind)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "pod")

@@ -1,0 +1,44 @@
+"""Subprocess worker: the dryrun cell path on an 8-device (2,2,2) mesh with
+reduced configs — covers sharding rules, cache sharding, lowering, compile
+and roofline analysis for every family without the 512-device cost."""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+
+from repro.configs import reduced_config
+from repro.configs.shapes import ShapeSpec
+from repro.launch.dryrun import CellOptions, run_cell
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cells = [
+        ("tinyllama-1.1b", ShapeSpec("train", 64, 8, "train")),
+        ("olmoe-1b-7b", ShapeSpec("train", 64, 8, "train")),
+        ("deepseek-v3-671b", ShapeSpec("decode", 128, 8, "decode")),
+        ("jamba-1.5-large-398b", ShapeSpec("decode", 128, 1, "decode")),
+        ("rwkv6-1.6b", ShapeSpec("prefill", 128, 8, "prefill")),
+        ("whisper-medium", ShapeSpec("train", 64, 8, "train")),
+        ("internvl2-76b", ShapeSpec("train", 64, 8, "train")),
+    ]
+    for arch, shape in cells:
+        cfg = reduced_config(arch)
+        cfg = dataclasses.replace(cfg, mamba_chunk=16)
+        res = run_cell(arch, shape.name, True, CellOptions(grad_accum=2),
+                       mesh=mesh, cfg=cfg, shape=shape)
+        assert res["ok"], res
+        roof = res["roofline"]
+        assert roof["flops_per_device"] > 0
+        assert roof["dominant"] in ("compute", "memory", "collective")
+        print(f"OK {arch} {shape.kind} {roof['dominant']}")
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Distributed HDB == single-device HDB, on 8 emulated host devices.
+
+Runs in a subprocess because device count is locked at first jax init
+(the main test process must keep seeing exactly 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "_dist_worker.py")
+
+
+def _run(mesh_kind):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, WORKER, mesh_kind],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert f"OK {mesh_kind}" in proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_matches_reference_flat_mesh():
+    _run("flat")
+
+
+@pytest.mark.slow
+def test_distributed_matches_reference_pod_mesh():
+    _run("pod")
+
+
+@pytest.mark.slow
+def test_distributed_matches_reference_3axis_mesh():
+    _run("3axis")

@@ -1,0 +1,20 @@
+"""Dryrun-path integration test on an 8-device emulated mesh (subprocess:
+device count locks at first jax init in the main test process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "_dryrun_worker.py")
+
+
+@pytest.mark.slow
+def test_dryrun_cells_on_small_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.pop("REPRO_SAVE_HLO", None)
+    proc = subprocess.run([sys.executable, WORKER], capture_output=True,
+                          text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    assert "ALL-OK" in proc.stdout

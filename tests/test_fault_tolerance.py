@@ -1,0 +1,165 @@
+"""Fault tolerance: checkpoint/restart (training AND the HDB pipeline),
+corruption detection, elastic resharding, straggler detection, preemption."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import blocks, hdb
+from repro.data import synthetic
+from repro.launch import specs
+from repro.models.model import build_model
+from repro.training import checkpoint
+from repro.training.optimizer import OptimizerConfig
+from repro.training.stragglers import PreemptionHandler, StragglerConfig, StragglerMonitor
+from repro.training.train_loop import TrainConfig, init_train_state, make_train_step
+
+
+def _tree_equal(a, b):
+    eq = jax.tree.map(
+        lambda x, y: bool(jnp.all(x.astype(jnp.float32) == y.astype(jnp.float32))),
+        a, b)
+    return all(jax.tree.leaves(eq))
+
+
+def test_checkpoint_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+        "b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+        "c": {"d": jnp.asarray([True, False]),
+              "e": jnp.asarray(3.25, jnp.float32)},
+        "f": jnp.asarray([1, 2], jnp.uint32),
+    }
+    checkpoint.save(str(tmp_path), 7, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    got = checkpoint.restore(str(tmp_path), tree)
+    assert _tree_equal(tree, got)
+    assert got["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.ones((8, 8))}
+    path = checkpoint.save(str(tmp_path), 1, tree)
+    npz = os.path.join(path, "arrays.npz")
+    data = dict(np.load(npz))
+    data["leaf_0"] = data["leaf_0"] + 1  # corrupt
+    np.savez(npz, **data)
+    with pytest.raises(IOError, match="corruption"):
+        checkpoint.restore(str(tmp_path), tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"w": jnp.zeros(2)}
+    for step in range(6):
+        checkpoint.save(str(tmp_path), step, tree, keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+
+
+def test_train_resume_bitwise_identical(tmp_path):
+    """kill-after-step-N resume == uninterrupted run (same batches)."""
+    cfg = reduced_config("tinyllama-1.1b")
+    model = build_model(cfg)
+    tcfg = TrainConfig(opt=OptimizerConfig(lr=1e-3, warmup_steps=0,
+                                           total_steps=50))
+    batches = [specs.train_batch(cfg, 16, 2, concrete=True,
+                                 rng=np.random.default_rng(i))
+               for i in range(6)]
+    step = jax.jit(make_train_step(model, tcfg))
+
+    # uninterrupted
+    s = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+    for b in batches:
+        s, _ = step(s, b)
+    # interrupted at step 3 + resume
+    s2 = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+    for b in batches[:3]:
+        s2, _ = step(s2, b)
+    checkpoint.save(str(tmp_path), 3, s2)
+    resumed = checkpoint.restore(str(tmp_path),
+                                 jax.eval_shape(lambda: s2))
+    for b in batches[3:]:
+        resumed, _ = step(resumed, b)
+    assert _tree_equal(s["params"], resumed["params"])
+    assert int(resumed["step"]) == 6
+
+
+def test_hdb_pipeline_checkpoint_resume(tmp_path):
+    """Blocking restarted from iteration-1 state matches the full run."""
+    corpus = synthetic.generate(synthetic.SyntheticSpec(num_entities=600, seed=2))
+    keys, valid = blocks.build_keys(corpus.columns, corpus.blocking)
+    cfg = hdb.HDBConfig(max_block_size=40, max_iterations=5)
+
+    full = hdb.hashed_dynamic_blocking(keys, valid, cfg)
+
+    # run iteration 0 manually, checkpoint the state, resume manually
+    psize = jnp.full(valid.shape, hdb.INT32_MAX, jnp.int32)
+    accepted, (k1, v1, p1), stats = hdb.hdb_iteration(cfg, keys, valid, psize)
+    state = {"keys": k1, "valid": v1, "psize": p1}
+    checkpoint.save(str(tmp_path), 0, state)
+    restored = checkpoint.restore(str(tmp_path), jax.eval_shape(lambda: state))
+
+    acc_list = [np.asarray(accepted)]
+    k, v, p = restored["keys"], restored["valid"], restored["psize"]
+    for _ in range(1, cfg.max_iterations):
+        acc, (k, v, p), st = hdb.hdb_iteration(cfg, k, v, p)
+        acc_list.append(np.asarray(acc))
+        if int(st["n_surviving_entries"]) == 0:
+            break
+    resumed_total = sum(a.sum() for a in acc_list)
+    full_total = len(full.rids)
+    assert resumed_total == full_total
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Restore with an explicit (single-device) sharding spec works — the
+    elastic path device_puts every leaf into the target sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    checkpoint.save(str(tmp_path), 0, tree)
+    shard = {"w": NamedSharding(mesh, P("data", None))}
+    got = checkpoint.restore(str(tmp_path), tree, sharding=shard)
+    assert got["w"].sharding == shard["w"]
+    assert _tree_equal(tree, got)
+
+
+def test_straggler_monitor_flags_persistent_slowness():
+    mon = StragglerMonitor(StragglerConfig(outlier_factor=2.0, trip_threshold=3))
+    flags = []
+    for step in range(20):
+        dur = 1.0 if step < 10 else 5.0  # becomes 5x slower at step 10
+        flags.append(mon.end_step(step, duration=dur))
+    assert not any(flags[:10])
+    assert any(flags[10:])
+
+
+def test_straggler_monitor_tolerates_single_blip():
+    mon = StragglerMonitor(StragglerConfig(outlier_factor=2.0, trip_threshold=3))
+    flags = [mon.end_step(0, duration=1.0)]
+    flags.append(mon.end_step(1, duration=9.0))  # one GC pause
+    for step in range(2, 10):
+        flags.append(mon.end_step(step, duration=1.0))
+    assert not any(flags)
+
+
+def test_preemption_handler_requests_checkpoint():
+    h = PreemptionHandler().install()
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.requested
+    finally:
+        h.uninstall()
+
+
+def test_heartbeat_written(tmp_path):
+    hb = str(tmp_path / "hb")
+    mon = StragglerMonitor(StragglerConfig(heartbeat_path=hb, heartbeat_every=2))
+    mon.end_step(0, duration=1.0)
+    mon.end_step(1, duration=1.0)
+    assert os.path.exists(hb)

@@ -1,0 +1,68 @@
+"""MinHash / LSH tests incl. the statistical Jaccard property (paper Fig 1a)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import minhash
+from repro.data import synthetic
+
+
+def test_minhash_shape_and_padding():
+    tokens = jnp.asarray(np.arange(12, dtype=np.uint32).reshape(3, 4))
+    mask = jnp.asarray([[True] * 4, [True, False, False, False], [False] * 4])
+    mh = minhash.minhash_tokens(tokens, mask, num_hashes=8)
+    assert mh.shape == (3, 8)
+    assert (np.asarray(mh[2]) == 0xFFFFFFFF).all()  # empty set -> sentinel
+
+
+def test_minhash_set_semantics():
+    """MinHash depends on the token SET: order and duplicates don't matter."""
+    a = jnp.asarray([[5, 9, 2, 2]], dtype=jnp.uint32)
+    b = jnp.asarray([[2, 5, 9, 9]], dtype=jnp.uint32)
+    m = jnp.ones((1, 4), bool)
+    np.testing.assert_array_equal(
+        np.asarray(minhash.minhash_tokens(a, m, 16)),
+        np.asarray(minhash.minhash_tokens(b, m, 16)))
+
+
+def test_minhash_collision_rate_tracks_jaccard():
+    """P[minhash_i(A) == minhash_i(B)] ~= J(A,B)."""
+    for j_target in (0.3, 0.7):
+        a, b, true_j = synthetic.jaccard_pair_corpus(400, j_target, set_size=50)
+        m = jnp.ones(a.shape, bool)
+        mh_a = np.asarray(minhash.minhash_tokens(jnp.asarray(a), m, 24))
+        mh_b = np.asarray(minhash.minhash_tokens(jnp.asarray(b), m, 24))
+        rate = (mh_a == mh_b).mean()
+        assert abs(rate - true_j) < 0.05, (rate, true_j)
+
+
+def test_lsh_probability_curve_matches_empirical():
+    """Empirical band-collision rate vs analytic 1-(1-j^w)^b (Fig 1a)."""
+    bands, w = 6, 4
+    for j_target in (0.4, 0.6, 0.8):
+        a, b, true_j = synthetic.jaccard_pair_corpus(500, j_target, set_size=60,
+                                                     seed=7)
+        m = jnp.ones(a.shape, bool)
+        ka, va = minhash.lsh_keys(jnp.asarray(a), m, bands, w)
+        kb, vb = minhash.lsh_keys(jnp.asarray(b), m, bands, w)
+        share = ((np.asarray(ka[0]) == np.asarray(kb[0]))
+                 & (np.asarray(ka[1]) == np.asarray(kb[1]))).any(axis=1)
+        analytic = float(minhash.lsh_probability(bands, w, true_j))
+        assert abs(share.mean() - analytic) < 0.08, (share.mean(), analytic, true_j)
+
+
+def test_band_keys_distinct_across_bands_and_columns():
+    mh = jnp.asarray(np.zeros((4, 8), np.uint32))
+    k_c0 = minhash.band_keys(mh, 2, 4, column_seed=0)
+    k_c1 = minhash.band_keys(mh, 2, 4, column_seed=1)
+    # same minhashes: band 0 key != band 1 key; column 0 != column 1
+    assert int(k_c0[0][0, 0]) != int(k_c0[0][0, 1]) or int(k_c0[1][0, 0]) != int(k_c0[1][0, 1])
+    assert int(k_c0[0][0, 0]) != int(k_c1[0][0, 0]) or int(k_c0[1][0, 0]) != int(k_c1[1][0, 0])
+
+
+def test_lsh_empty_rows_emit_no_keys():
+    tokens = jnp.zeros((2, 4), jnp.uint32)
+    mask = jnp.asarray([[True, True, False, False], [False] * 4])
+    _, valid = minhash.lsh_keys(tokens, mask, 3, 2)
+    assert np.asarray(valid)[0].all()
+    assert not np.asarray(valid)[1].any()

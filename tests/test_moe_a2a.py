@@ -1,0 +1,18 @@
+"""a2a MoE dispatch == psum-partial dispatch (8 emulated devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = os.path.join(os.path.dirname(__file__), "_moe_worker.py")
+
+
+@pytest.mark.slow
+def test_a2a_matches_psum_dispatch():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([sys.executable, WORKER], capture_output=True,
+                          text=True, timeout=900, env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    assert "MOE-A2A-OK" in proc.stdout

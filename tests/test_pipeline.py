@@ -1,0 +1,90 @@
+"""End-to-end 4-stage dedup pipeline tests + loader determinism."""
+import numpy as np
+import pytest
+
+from repro.data import components, loader, matcher, pipeline, synthetic
+from repro.core import hdb, pairs
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic.generate(synthetic.SyntheticSpec(num_entities=1200, seed=5))
+
+
+def test_connected_components_basic():
+    lab = components.connected_components(6, np.array([0, 1, 4]), np.array([1, 2, 5]))
+    assert lab[0] == lab[1] == lab[2]
+    assert lab[4] == lab[5]
+    assert lab[3] == 3
+    assert lab[0] != lab[4]
+
+
+def test_connected_components_chain():
+    n = 500
+    a = np.arange(n - 1)
+    b = a + 1
+    lab = components.connected_components(n, a, b)
+    assert (lab == 0).all()
+
+
+def test_matcher_scores_duplicates_higher(corpus):
+    la, lb = corpus.labeled_pairs(max_pairs=500)
+    rng = np.random.default_rng(0)
+    ra = rng.integers(0, corpus.num_records, 500)
+    rb = rng.integers(0, corpus.num_records, 500)
+    nontrivial = corpus.entity_id[ra] != corpus.entity_id[rb]
+    pos = matcher.score_pairs(corpus.columns, la, lb)
+    neg = matcher.score_pairs(corpus.columns, ra[nontrivial], rb[nontrivial])
+    assert pos.mean() > 0.5
+    assert neg.mean() < 0.2
+    assert pos.mean() - neg.mean() > 0.4
+
+
+def test_dedup_pipeline_end_to_end(corpus):
+    rep = pipeline.dedup_corpus(corpus, hdb.HDBConfig(max_block_size=80))
+    q = pipeline.dedup_quality(rep, corpus)
+    # planted duplicates should be mostly merged, few false merges
+    assert q["pair_recall"] > 0.85
+    assert q["pair_precision"] > 0.9
+    assert rep.num_survivors < corpus.num_records
+    # survivors are one-per-component
+    assert rep.num_survivors == len(np.unique(rep.component_of))
+
+
+def test_loader_deterministic_and_resumable(corpus):
+    cfg = loader.LoaderConfig(batch_size=8, seq_len=64, vocab_size=1000)
+    ld1 = loader.TokenStreamLoader(corpus, cfg)
+    ld2 = loader.TokenStreamLoader(corpus, cfg)
+    a1, t1 = ld1.batch(7)
+    a2, t2 = ld2.batch(7)  # fresh loader, same step -> identical batch
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(t1, t2)
+    # targets are inputs shifted by one
+    np.testing.assert_array_equal(a1[:, 1:], t1[:, :-1])
+
+
+def test_loader_dp_sharding_partitions_batch(corpus):
+    cfg = loader.LoaderConfig(batch_size=8, seq_len=32, vocab_size=1000)
+    ld = loader.TokenStreamLoader(corpus, cfg)
+    full, _ = ld.batch(3)
+    shards = [ld.batch(3, dp_rank=r, dp_size=4)[0] for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(shards), full)
+
+
+def test_pair_bitmap_roundtrip():
+    n = 23
+    rng = np.random.default_rng(1)
+    ii, jj = np.triu_indices(n, 1)
+    keep = rng.random(len(ii)) < 0.3
+    bm = pairs.build_pair_bitmap(n, ii[keep], jj[keep])
+    gi, gj = pairs.read_pair_bitmap(n, bm)
+    np.testing.assert_array_equal(gi, ii[keep])
+    np.testing.assert_array_equal(gj, jj[keep])
+
+
+def test_pair_bit_index_is_dense_triangular():
+    n = 17
+    ii, jj = np.triu_indices(n, 1)
+    idx = pairs.pair_bit_index(ii, jj, n)
+    assert idx.min() == 0 and idx.max() == n * (n - 1) // 2 - 1
+    assert len(np.unique(idx)) == len(idx)

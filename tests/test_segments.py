@@ -1,0 +1,81 @@
+"""Property tests for sort/segment reductions vs a numpy oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segments, u64, hashing
+
+
+def _to_u64(xs):
+    arr = hashing.np_to_u64_arrays(np.asarray(xs, np.uint64))
+    packed = jnp.asarray(arr)
+    return packed[..., 0], packed[..., 1]
+
+
+small_keys = st.lists(st.integers(min_value=0, max_value=12), min_size=1, max_size=64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_keys)
+def test_segment_counts_match_numpy(xs):
+    xs = sorted(xs)
+    key = _to_u64(xs)
+    got = np.asarray(segments.segment_counts(key))
+    vals, counts = np.unique(np.asarray(xs), return_counts=True)
+    true = dict(zip(vals.tolist(), counts.tolist()))
+    for x, g in zip(xs, got):
+        assert g == true[x]
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_keys)
+def test_segment_xor_matches_numpy(xs):
+    xs = sorted(xs)
+    key = _to_u64(xs)
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 62, len(xs)).astype(np.uint64)
+    v = _to_u64(vals)
+    xh, xl = segments.segment_xor(key, v)
+    got = (np.asarray(xh).astype(np.uint64) << np.uint64(32)) | np.asarray(xl)
+    true = {}
+    for x, val in zip(xs, vals):
+        true[x] = true.get(x, np.uint64(0)) ^ val
+    for x, g in zip(xs, got):
+        assert g == true[x]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=1 << 60), min_size=1, max_size=50),
+       st.lists(st.integers(min_value=0, max_value=1 << 60), min_size=1, max_size=50))
+def test_lookup_u64(table_vals, queries):
+    table_vals = sorted(set(table_vals))
+    tkey = _to_u64(table_vals)
+    vals = jnp.arange(len(table_vals), dtype=jnp.int32) + 100
+    qkey = _to_u64(queries)
+    hit, got = segments.lookup_u64(tkey, vals, qkey, default=-1)
+    hit, got = np.asarray(hit), np.asarray(got)
+    index = {v: i + 100 for i, v in enumerate(table_vals)}
+    for q, h, g in zip(queries, hit, got):
+        if q in index:
+            assert h and g == index[q]
+        else:
+            assert not h and g == -1
+
+
+def test_sort_by_key_is_lexicographic():
+    rng = np.random.default_rng(3)
+    xs = rng.integers(0, 1 << 63, 1000).astype(np.uint64)
+    key = _to_u64(xs)
+    (shi, slo), _ = segments.sort_by_key(key, [jnp.arange(1000, dtype=jnp.int32)])
+    got = (np.asarray(shi).astype(np.uint64) << np.uint64(32)) | np.asarray(slo)
+    np.testing.assert_array_equal(got, np.sort(xs))
+
+
+def test_compact_moves_valid_to_prefix():
+    key = _to_u64([5, 6, 7, 8])
+    mask = jnp.asarray([False, True, False, True])
+    (khi, klo), [p], n = segments.compact(mask, key, [jnp.asarray([10, 20, 30, 40])])
+    assert int(n) == 2
+    got = (np.asarray(khi).astype(np.uint64) << np.uint64(32)) | np.asarray(klo)
+    assert got[:2].tolist() == [6, 8] and p[:2].tolist() == [20, 40]

@@ -1,0 +1,101 @@
+"""Property tests for the CMS and Bloom sketches."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketches, u64, hashing
+
+
+def _keys_from_ints(xs):
+    arr = hashing.np_to_u64_arrays(np.asarray(xs, np.uint64))
+    packed = jnp.asarray(arr)
+    return packed[..., 0], packed[..., 1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=1 << 48), min_size=1, max_size=300))
+def test_cms_never_undercounts(xs):
+    cfg = sketches.CMSConfig(depth=4, width=1 << 8)  # deliberately tiny
+    key = _keys_from_ints(xs)
+    mask = jnp.ones(len(xs), bool)
+    cms = sketches.cms_build(cfg, key, mask)
+    est = np.asarray(sketches.cms_query(cfg, cms, key))
+    vals, counts = np.unique(np.asarray(xs, np.uint64), return_counts=True)
+    true = dict(zip(vals.tolist(), counts.tolist()))
+    for x, e in zip(xs, est):
+        assert e >= true[x]
+
+
+def test_cms_exact_when_wide():
+    rng = np.random.default_rng(0)
+    xs = rng.integers(0, 1 << 40, size=2000)
+    xs = np.repeat(xs, rng.integers(1, 5, size=len(xs)))
+    cfg = sketches.CMSConfig(depth=4, width=1 << 18)
+    key = _keys_from_ints(xs)
+    cms = sketches.cms_build(cfg, key, jnp.ones(len(xs), bool))
+    est = np.asarray(sketches.cms_query(cfg, cms, key))
+    vals, counts = np.unique(xs, return_counts=True)
+    true = dict(zip(vals.tolist(), counts.tolist()))
+    exact = sum(int(e) == true[x] for x, e in zip(xs.tolist(), est))
+    assert exact / len(xs) > 0.999
+
+
+def test_cms_mask_excludes_entries():
+    cfg = sketches.CMSConfig(depth=2, width=1 << 10)
+    xs = [7, 7, 7, 7]
+    key = _keys_from_ints(xs)
+    mask = jnp.asarray([True, True, False, False])
+    cms = sketches.cms_build(cfg, key, mask)
+    assert int(sketches.cms_query(cfg, cms, key)[0]) == 2
+
+
+def test_cms_merge_is_linear():
+    cfg = sketches.CMSConfig(depth=4, width=1 << 10)
+    rng = np.random.default_rng(1)
+    xs = rng.integers(0, 1000, 500)
+    ka = _keys_from_ints(xs[:250])
+    kb = _keys_from_ints(xs[250:])
+    kall = _keys_from_ints(xs)
+    ones = lambda n: jnp.ones(n, bool)
+    merged = sketches.cms_merge(sketches.cms_build(cfg, ka, ones(250)),
+                                sketches.cms_build(cfg, kb, ones(250)))
+    direct = sketches.cms_build(cfg, kall, ones(500))
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(direct))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=1 << 48), min_size=1, max_size=200),
+       st.lists(st.integers(min_value=0, max_value=1 << 48), min_size=1, max_size=200))
+def test_bloom_no_false_negatives(members, probes):
+    cfg = sketches.BloomConfig.for_capacity(len(members), fpr=1e-6)
+    mkey = _keys_from_ints(members)
+    bits = sketches.bloom_build(cfg, mkey, jnp.ones(len(members), bool))
+    hits = np.asarray(sketches.bloom_query(cfg, bits, mkey))
+    assert hits.all()
+    # false-positive sanity on non-members
+    non = [p for p in probes if p not in set(members)]
+    if non:
+        nkey = _keys_from_ints(non)
+        fp = np.asarray(sketches.bloom_query(cfg, bits, nkey)).mean()
+        assert fp <= 0.05
+
+
+def test_bloom_fpr_near_target():
+    rng = np.random.default_rng(2)
+    members = rng.integers(0, 1 << 60, 5000)
+    cfg = sketches.BloomConfig.for_capacity(5000, fpr=1e-3)
+    bits = sketches.bloom_build(cfg, _keys_from_ints(members),
+                                jnp.ones(len(members), bool))
+    probes = rng.integers(1 << 61, 1 << 62, 20000)
+    fp = np.asarray(sketches.bloom_query(cfg, bits, _keys_from_ints(probes))).mean()
+    assert fp < 5e-3
+
+
+def test_bloom_merge_is_union():
+    cfg = sketches.BloomConfig(num_slots=1 << 12, num_hashes=4)
+    a = sketches.bloom_build(cfg, _keys_from_ints([1, 2, 3]), jnp.ones(3, bool))
+    b = sketches.bloom_build(cfg, _keys_from_ints([4, 5]), jnp.ones(2, bool))
+    m = sketches.bloom_merge(a, b)
+    hits = np.asarray(sketches.bloom_query(cfg, m, _keys_from_ints([1, 2, 3, 4, 5])))
+    assert hits.all()

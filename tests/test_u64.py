@@ -1,0 +1,108 @@
+"""Property tests: u64 limb arithmetic must match python int semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import u64, hashing
+
+MASK = (1 << 64) - 1
+u64s = st.integers(min_value=0, max_value=MASK)
+
+
+def _mk(x):
+    return u64.from_int(x)
+
+
+@settings(max_examples=60, deadline=None)
+@given(u64s, u64s)
+def test_add(a, b):
+    assert u64.to_int(u64.add(_mk(a), _mk(b))) == (a + b) & MASK
+
+
+@settings(max_examples=60, deadline=None)
+@given(u64s, u64s)
+def test_mul(a, b):
+    assert u64.to_int(u64.mul(_mk(a), _mk(b))) == (a * b) & MASK
+
+
+@settings(max_examples=40, deadline=None)
+@given(u64s, st.integers(min_value=0, max_value=63))
+def test_shifts(a, n):
+    assert u64.to_int(u64.shr(_mk(a), n)) == (a >> n) & MASK
+    assert u64.to_int(u64.shl(_mk(a), n)) == (a << n) & MASK
+
+
+@settings(max_examples=40, deadline=None)
+@given(u64s, st.integers(min_value=0, max_value=63))
+def test_rotl(a, n):
+    expect = ((a << n) | (a >> (64 - n))) & MASK if n else a
+    assert u64.to_int(u64.rotl(_mk(a), n)) == expect
+
+
+@settings(max_examples=60, deadline=None)
+@given(u64s, u64s)
+def test_compare(a, b):
+    assert bool(u64.lt(_mk(a), _mk(b))) == (a < b)
+    assert bool(u64.le(_mk(a), _mk(b))) == (a <= b)
+    assert bool(u64.eq(_mk(a), _mk(b))) == (a == b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(u64s)
+def test_mix64_matches_numpy_mirror(a):
+    assert u64.to_int(hashing.mix64(_mk(a))) == hashing.np_mix64(a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(u64s, st.integers(min_value=0, max_value=2**31))
+def test_hash_u64_matches_numpy_mirror(a, seed):
+    got = u64.to_int(hashing.hash_u64(_mk(a), seed))
+    assert got == hashing.np_hash_u64(a, seed)
+
+
+def test_mix64_bijective_on_sample():
+    xs = np.random.default_rng(0).integers(0, MASK, size=4096, dtype=np.uint64)
+    arr = hashing.np_to_u64_arrays(xs)
+    hi, lo = hashing.mix64(u64.unpack(jnp.asarray(arr)))
+    packed = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo)
+    assert len(np.unique(packed)) == len(np.unique(xs))
+
+
+def test_pack_unpack_roundtrip():
+    xs = [0, 1, MASK, 0xDEADBEEFCAFEBABE]
+    for x in xs:
+        assert u64.to_int(u64.unpack(u64.pack(_mk(x)))) == x
+
+
+def test_sentinel_ordering():
+    s = u64.sentinel(())
+    assert bool(u64.is_sentinel(s))
+    assert bool(u64.lt(_mk(12345), s))
+
+
+def test_vectorized_shapes():
+    hi = jnp.arange(12, dtype=jnp.uint32).reshape(3, 4)
+    lo = hi + 7
+    out = hashing.mix64((hi, lo))
+    assert out[0].shape == (3, 4) and out[0].dtype == jnp.uint32
+
+
+def test_combine_is_order_sensitive_and_mixes():
+    a, b = _mk(1), _mk(2)
+    ab = u64.to_int(hashing.combine(a, b))
+    ba = u64.to_int(hashing.combine(b, a))
+    assert ab != ba
+    # avalanche sanity: flipping one input bit changes ~half the output bits
+    c = u64.to_int(hashing.combine(_mk(1 ^ (1 << 17)), b))
+    assert 10 < bin(ab ^ c).count("1") < 54
+
+
+def test_hash_distribution_uniformity():
+    """Chi-square-ish sanity: low nibble of hashes should be near uniform."""
+    x = jnp.arange(1 << 14, dtype=jnp.uint32)
+    _, lo = hashing.hash_u32(x, seed=7)
+    counts = np.bincount(np.asarray(lo) & 15, minlength=16)
+    expected = (1 << 14) / 16
+    assert np.all(np.abs(counts - expected) < 6 * np.sqrt(expected))
