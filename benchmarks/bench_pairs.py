@@ -1,0 +1,88 @@
+"""Pair materialization throughput: numpy vs JAX vs Pallas backends.
+
+Measures end-to-end ``dedupe_pairs`` (enumerate + largest-block-wins
+dedupe) in pairs/sec across block-size distributions — the numpy shift
+method degrades on many-small-block layouts (one pass per diagonal
+offset), while the device engine's cost is distribution-independent
+(O(1) integer decode per slot + one sort). The acceptance workload is
+~1M pair slots, where the JAX backend must report >=5x the numpy path.
+
+Pallas timings here are interpret-mode (CPU container) and are parity
+checks, not perf numbers — see bench_kernels.py for the same caveat.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit
+
+from repro.core import pairs
+
+
+def _make_blocks(dist: str, target_slots: int, seed: int = 0) -> pairs.Blocks:
+    """Synthesize a CSR block layout with ~target_slots pair slots."""
+    rng = np.random.default_rng(seed)
+    if dist == "small":        # many tiny blocks (shift method's worst case)
+        size_draw = lambda: rng.integers(2, 9)
+    elif dist == "medium":
+        size_draw = lambda: rng.integers(16, 65)
+    elif dist == "large":      # few big blocks (meshgrid path)
+        size_draw = lambda: rng.integers(300, 501)
+    else:                      # zipf-ish mix
+        size_draw = lambda: min(500, 2 + int(rng.zipf(1.5)))
+    sizes = []
+    slots = 0
+    while slots < target_slots:
+        n = int(size_draw())
+        sizes.append(n)
+        slots += n * (n - 1) // 2
+    sizes = np.asarray(sizes, np.int64)
+    start = np.concatenate([[0], np.cumsum(sizes)])[:-1]
+    # overlapping membership so the dedupe actually removes pairs
+    universe = int(sizes.sum())
+    members = np.concatenate(
+        [np.sort(rng.choice(universe, n, replace=False)) for n in sizes]
+    ).astype(np.int64)
+    zu = np.zeros(len(sizes), np.uint32)
+    return pairs.Blocks(zu, zu, start, sizes, members)
+
+
+def _time_backend(blk: pairs.Blocks, backend: str, iters: int = 3) -> float:
+    pairs.dedupe_pairs(blk, backend=backend)  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = pairs.dedupe_pairs(blk, backend=backend)
+    dt = (time.perf_counter() - t0) / iters
+    assert out.exact
+    return dt
+
+
+def run(distributions=("small", "medium", "large", "zipf"),
+        target_slots: int = 1_000_000, check_speedup: bool = False):
+    print("# pairs: distribution,backend,seconds,pairs_per_sec,speedup_vs_numpy")
+    accept_ratio = None
+    for dist in distributions:
+        blk = _make_blocks(dist, target_slots)
+        total = blk.num_pair_slots
+        t_np = _time_backend(blk, "numpy")
+        for backend in ("numpy", "jax", "pallas"):
+            t = t_np if backend == "numpy" else _time_backend(blk, backend)
+            rate = total / t
+            speedup = t_np / t
+            emit(f"pairs/{dist}_{backend}", t * 1e6,
+                 f"pairs_per_s={rate:.3g};speedup={speedup:.2f}x;slots={total}")
+            print(f"pairs,{dist},{backend},{t:.4f},{rate:.3g},{speedup:.2f}")
+            if dist == "small" and backend == "jax":
+                accept_ratio = speedup
+    if check_speedup and accept_ratio is not None:
+        assert accept_ratio >= 5.0, (
+            f"JAX backend only {accept_ratio:.2f}x over numpy on the "
+            "1M-slot small-block workload (acceptance: >=5x)")
+        print(f"# acceptance OK: jax {accept_ratio:.2f}x >= 5x")
+
+
+if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.bench_pairs [--check]
+    import sys
+    run(check_speedup="--check" in sys.argv)

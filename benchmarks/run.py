@@ -23,18 +23,20 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_kernels, bench_lsh_curve, bench_lsh_sweep,
-                   bench_scaling, bench_table2, bench_table3)
+                   bench_pairs, bench_scaling, bench_table2, bench_table3)
 
     t0 = time.time()
     print("name,us_per_call,derived")
     bench_kernels.run()
     bench_lsh_curve.run()
     if args.fast:
+        bench_pairs.run(distributions=("small",), target_slots=100_000)
         bench_table2.run(datasets=("SYN10K",))
         bench_table3.run(datasets=("SYN10K",))
         bench_lsh_sweep.run(settings=((6, 4), (1, 1)))
         bench_scaling.run(datasets=("SYN10K", "SYN30K"))
     else:
+        bench_pairs.run()
         bench_table2.run()
         bench_table3.run()
         bench_lsh_sweep.run()

@@ -1,5 +1,7 @@
 import os
 import sys
 
-# Make `import repro` work regardless of how pytest is invoked.
+# Make `import repro` work regardless of how pytest is invoked, and make
+# test-local helpers (tests/_propcheck.py) importable from any rootdir.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -37,7 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import hashing, segments, sketches, u64
 from .hdb import (BlockingResult, HDBConfig, INT32_MAX, IterationStats,
-                  intersect_keys)
+                  RepCapacityWarning, intersect_keys)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,8 +281,10 @@ def distributed_hashed_dynamic_blocking(
         if verbose:
             print(f"[hdb-dist] iter={it} {st}")
         if st.rep_overflow:
-            print(f"[hdb-dist] WARNING: buffer overflow ({st.rep_overflow} "
-                  "entries dropped); raise DistConfig capacities")
+            warnings.warn(
+                f"[hdb-dist] buffer overflow ({st.rep_overflow} entries "
+                "dropped); raise DistConfig capacities",
+                RepCapacityWarning, stacklevel=2)
         keys_packed, valid, psize = new_keys, new_valid, new_psize
         if checkpoint_cb is not None:
             checkpoint_cb(it, {"keys": keys_packed, "valid": valid, "psize": psize})
@@ -294,3 +297,83 @@ def distributed_hashed_dynamic_blocking(
         stats=all_stats,
         num_records=n,
     )
+
+
+# ---------------------------------------------------------------------------
+# Distributed pair materialization (paper §3.1 over the mesh)
+# ---------------------------------------------------------------------------
+
+
+def materialize_pairs_distributed(
+    blocks, mesh: Mesh, axis_names: Sequence[str] = ("data",),
+    budget: int = 50_000_000, chunk_per_shard: int = 1 << 18,
+    interpret: bool = True, sample_seed: int = 0,
+):
+    """Shard pair-slot decoding over the mesh; dedupe once at the end.
+
+    The canonical pair-slot space [0, total) is round-robined over shards
+    in fixed ``chunk_per_shard`` chunks via shard_map — slot decoding is
+    embarrassingly parallel (every shard holds the replicated CSR arrays
+    and decodes a disjoint contiguous slot range, the same computation as
+    ``kernels.pairs.decode_chunk``). The largest-block-wins dedupe needs
+    one global sort, which runs once over the bounded (<= budget + pad)
+    pair buffer. Output is bit-identical to
+    ``core.pairs.dedupe_pairs(blocks)`` on a single device.
+
+    Budget-exceeded (sampling) and int32-contract fallbacks delegate to
+    the single-device driver.
+    """
+    from . import pairs as pairs_lib
+    from ..kernels import pairs as pairs_kernels
+    from ..kernels.pairs import ref as pairs_ref
+
+    axes = tuple(axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    chunk = chunk_per_shard
+    per_round = n_shards * chunk
+    total = blocks.num_pair_slots
+    reason = pairs_lib._device_contract_ok(blocks, budget)
+    if reason is None and total + per_round > INT32_MAX:
+        # shard bases of the padded final round would wrap int32
+        reason = f"slot space {total} + round {per_round} overflows int32"
+    if total == 0 or total > budget or reason is not None:
+        if reason is not None:
+            warnings.warn(f"distributed pairs unavailable ({reason}); "
+                          "using single-device driver", RuntimeWarning,
+                          stacklevel=2)
+        return pairs_lib.dedupe_pairs(blocks, budget=budget,
+                                      sample_seed=sample_seed,
+                                      interpret=interpret)
+
+    cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
+    start32 = jnp.asarray(blocks.start, jnp.int32)
+    size32 = jnp.asarray(blocks.size, jnp.int32)
+    mem32 = jnp.asarray(blocks.members, jnp.int32)
+
+    def local_decode(cum, start, size, members, base):
+        return pairs_kernels.decode_chunk(
+            cum, start, size, members, base[0], jnp.int32(total),
+            chunk=chunk, use_kernel=False, interpret=interpret)
+
+    mapped = jax.jit(shard_map(
+        local_decode, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+        check_rep=False))
+
+    shard_offsets = np.arange(n_shards, dtype=np.int32) * chunk
+    out_a, out_b, out_s, out_v = [], [], [], []
+    for r0 in range(0, total, per_round):
+        base = jnp.asarray(np.int32(r0) + shard_offsets)
+        a, b, s, v = mapped(cum32, start32, size32, mem32, base)
+        out_a.append(np.asarray(a)); out_b.append(np.asarray(b))
+        out_s.append(np.asarray(s)); out_v.append(np.asarray(v))
+    sa, sb, ss, winner = pairs_kernels.dedupe_device(
+        jnp.asarray(np.concatenate(out_a)), jnp.asarray(np.concatenate(out_b)),
+        jnp.asarray(np.concatenate(out_s)), jnp.asarray(np.concatenate(out_v)))
+    w = np.asarray(winner)
+    return pairs_lib.PairSet(
+        a=np.asarray(sa)[w].astype(np.int64),
+        b=np.asarray(sb)[w].astype(np.int64),
+        src_size=np.asarray(ss)[w].astype(np.int64),
+        exact=True, total_slots=total)

@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -38,6 +40,12 @@ from . import u64, hashing, segments, sketches
 from .u64 import U64
 
 INT32_MAX = np.iinfo(np.int32).max
+logger = logging.getLogger(__name__)
+
+
+class RepCapacityWarning(RuntimeWarning):
+    """Fixed-capacity representative/route buffers overflowed; some blocks
+    were dropped. Raise the relevant capacity config."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -289,15 +297,18 @@ def hashed_dynamic_blocking(
         if verbose:
             print(f"[hdb] iter={it} {st}")
         if st.rep_overflow:
-            print(f"[hdb] WARNING: representative capacity overflow "
-                  f"({st.rep_overflow} blocks dropped); raise rep_capacity")
+            warnings.warn(
+                f"[hdb] representative capacity overflow ({st.rep_overflow} "
+                "blocks dropped); raise HDBConfig.rep_capacity",
+                RepCapacityWarning, stacklevel=2)
         keys_packed, valid, psize = new_keys, new_valid, new_psize
         if st.n_surviving_entries == 0:
             break
     else:
         leftover = int(jnp.sum(valid.astype(jnp.int32)))
-        if leftover and verbose:
-            print(f"[hdb] max_iterations reached with {leftover} live keys dropped")
+        if leftover:
+            logger.info("[hdb] max_iterations reached with %d live keys dropped",
+                        leftover)
     return BlockingResult(
         rids=np.concatenate(acc_rid) if acc_rid else np.zeros((0,), np.int64),
         key_hi=np.concatenate(acc_hi) if acc_hi else np.zeros((0,), np.uint32),

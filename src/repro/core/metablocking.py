@@ -12,11 +12,14 @@ against:
   3. Edge weighting: CBS (common blocks scheme) = number of shared blocks.
   4. Weighted Edge Pruning (WEP): keep edges with weight >= global mean.
 
-Everything is numpy host-side: meta-blocking is linear in the *input
-comparison count* (the paper's central criticism of it — §4.2), so at this
-container's scale it is bounded by an explicit pair budget; exceeding the
-budget raises, mirroring the paper's observation that PMB fails outright
-on their 50M+ datasets.
+Meta-blocking is linear in the *input comparison count* (the paper's
+central criticism of it — §4.2), so at this container's scale it is
+bounded by an explicit pair budget; exceeding the budget raises,
+mirroring the paper's observation that PMB fails outright on their 50M+
+datasets. Candidate-edge enumeration (stage 3, the hot loop) streams
+through the device-side pair engine (``core.pairs.enumerate_pairs``,
+selectable via ``MetaBlockingConfig.pairs_backend``); purge/filter/CBS
+weighting stay numpy host-side.
 """
 from __future__ import annotations
 
@@ -25,6 +28,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from . import pairs as pairs_lib
 from .hdb import BlockingResult, IterationStats
 
 
@@ -39,6 +43,7 @@ class MetaBlockingConfig:
     filter_ratio: float = 0.8          # stage 2 (keep smallest 80% of a record's blocks)
     edge_budget: int = 60_000_000      # candidate edges (with multiplicity)
     min_block_size: int = 2
+    pairs_backend: str = "auto"        # stage 3 enumeration engine
 
 
 def _blocks_from_keys(keys_np: np.ndarray, valid_np: np.ndarray):
@@ -95,15 +100,18 @@ def meta_blocking(keys_packed, valid, cfg: MetaBlockingConfig = MetaBlockingConf
             f"meta-blocking needs {total_edges:.3g} candidate edges "
             f"(> budget {cfg.edge_budget:.3g}); linear-in-comparisons cost "
             "is the paper's §4.2 criticism")
-    seg = np.repeat(np.arange(len(b_starts)), b_sizes)
+    edge_blocks = pairs_lib.Blocks(
+        key_hi=np.zeros(len(b_starts), np.uint32),
+        key_lo=np.zeros(len(b_starts), np.uint32),
+        start=b_starts.astype(np.int64),
+        size=b_sizes.astype(np.int64),
+        members=r_sorted.astype(np.int64),
+    )
     a_l, b_l = [], []
-    max_d = int(b_sizes.max()) if len(b_sizes) else 0
-    for d in range(1, max_d):
-        ok = seg[d:] == seg[:-d]
-        if not ok.any():
-            continue
-        a_l.append(r_sorted[:-d][ok])
-        b_l.append(r_sorted[d:][ok])
+    for ca, cb, _ in pairs_lib.enumerate_pairs(edge_blocks,
+                                               backend=cfg.pairs_backend):
+        a_l.append(ca)
+        b_l.append(cb)
     if not a_l:
         z = np.zeros((0,), np.int64)
         return z, z

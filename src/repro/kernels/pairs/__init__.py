@@ -1,0 +1,5 @@
+from .ops import (decode_chunk, decode_block_local, dedupe_device,  # noqa: F401
+                  dedupe_packed_host, pack_sort_words, search_steps_for,
+                  tri_decode_jnp, MAX_BLOCK_N, MAX_SEARCH_STEPS,
+                  PACK_RID_BITS)
+from .pairs import tri_decode_pallas  # noqa: F401

@@ -1,0 +1,203 @@
+"""Public jit'd pair-engine ops: chunked slot decode + sort-based dedupe.
+
+The engine works in *pair-slot space*: a block of size ``n`` owns C(n, 2)
+consecutive slots of the canonical enumeration (see ref.py). All device
+work is fixed-shape:
+
+- ``decode_chunk``: decode slots ``[base, base + C)`` (padded with an
+  in-range validity mask) into (a, b, src_size). Because chunk slots are
+  contiguous and the cumulative table is sorted, the slot -> block map is
+  an O(B + C) scatter-of-block-starts + cumsum rather than a per-slot
+  binary search (XLA's searchsorted costs ~17 gather rounds; the scan
+  form measured ~30x cheaper on CPU). The triangular decode runs in the
+  Pallas kernel (``use_kernel=True``) or an equivalent jnp integer
+  binary search whose depth adapts to the layout's max block size
+  (``search_steps_for``); the member gathers stay in XLA.
+- ``decode_block_local``: same, but for pre-split (block, local) pairs —
+  the sampling fallback splits its int64 slot draws host-side because
+  global slot indices overflow int32 at scale.
+- dedupe: "largest block wins" is ONE sort by the 62-bit word
+  ``[a:23 | b:23 | (MAX-size):16]`` + a segment-start winner mask.
+  ``pack_sort_words`` builds the word as a uint32 limb pair on device;
+  ``dedupe_packed_host`` sorts it as a single u64 with ``np.sort``
+  (numpy's radix-ish sort beats XLA CPU's comparator sort ~40x, and on
+  CPU host==device memory so there is no transfer) while
+  ``dedupe_device`` keeps everything in ``lax.sort`` for real
+  accelerators. Both produce identical winners.
+
+int32 contract (x64 stays off — see core/u64.py): record ids and the
+materialized slot range must be < 2**31, block sizes <= MAX_BLOCK_N; the
+host driver in core/pairs.py enforces both and falls back to numpy. The
+packed dedupe additionally needs rids < 2**PACK_RID_BITS; the driver
+falls back to ``dedupe_device`` beyond that.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pairs import (tri_decode_pallas, search_steps_for,  # noqa: F401
+                    MAX_BLOCK_N, MAX_SEARCH_STEPS)
+
+_INT32_MAX = 2**31 - 1
+_LANES = 128
+_TILE = 8 * _LANES  # minimum int32 tile footprint of the Pallas kernel
+
+# 62-bit sort-word layout: [a: PACK_RID_BITS | b: PACK_RID_BITS | inv_size: 16]
+PACK_RID_BITS = 23
+_PACK_SIZE_BITS = 16
+_SIZE_MASK = (1 << _PACK_SIZE_BITS) - 1  # == MAX_BLOCK_N
+
+
+def tri_decode_jnp(local: jnp.ndarray, n: jnp.ndarray,
+                   steps: int = MAX_SEARCH_STEPS
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp mirror of the Pallas kernel: exact uint32 binary search."""
+    t = local.astype(jnp.uint32)
+    n = n.astype(jnp.uint32)
+    nm1 = n - 1
+    lo = jnp.zeros_like(t)
+    hi = jnp.where(n >= 2, n - 2, 0)
+    for _ in range(steps):
+        mid = (lo + hi + 1) // 2
+        cum = mid * nm1 - (mid * (mid - 1)) // 2
+        go_right = cum <= t
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid - 1)
+    i = lo
+    cum_i = i * nm1 - (i * (i - 1)) // 2
+    j = t - cum_i + i + 1
+    return i.astype(jnp.int32), j.astype(jnp.int32)
+
+
+def _tri_decode(local, n, steps: int, use_kernel: bool, interpret: bool):
+    if not use_kernel:
+        return tri_decode_jnp(local, n, steps)
+    flat = local.reshape(-1)
+    pad = (-flat.shape[0]) % _TILE
+    lp = jnp.pad(flat, (0, pad)).reshape(-1, _LANES)
+    np_ = jnp.pad(n.reshape(-1), (0, pad)).reshape(-1, _LANES)
+    i, j = tri_decode_pallas(lp, np_, steps=steps, interpret=interpret)
+    sl = slice(0, flat.shape[0])
+    return i.reshape(-1)[sl].reshape(local.shape), j.reshape(-1)[sl].reshape(local.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "steps", "use_kernel", "interpret"))
+def decode_chunk(cum: jnp.ndarray, start: jnp.ndarray, size: jnp.ndarray,
+                 members: jnp.ndarray, base: jnp.ndarray, total: jnp.ndarray,
+                 *, chunk: int, steps: int = MAX_SEARCH_STEPS,
+                 use_kernel: bool = False, interpret: bool = True):
+    """Decode pair slots [base, base+chunk) -> (a, b, src_size, valid).
+
+    All CSR inputs are int32 device arrays; ``cum`` has length B+1 with
+    ``cum[B] == total``. Slots >= total are masked invalid.
+    """
+    offsets = jnp.arange(chunk, dtype=jnp.int32)
+    # base-relative validity: `base + offset` wraps int32 in padding lanes
+    # when total approaches 2**31, so compare offsets against the remaining
+    # slot count instead of comparing (possibly wrapped) absolute slots.
+    valid = offsets < (total - base)
+    slots = base + offsets
+    # slot -> block: scatter each block's chunk-relative start, cumsum.
+    # block[k] = #(blocks with cum[b] <= base + k) - 1, clipped into range.
+    start_pos = jnp.clip(cum[:-1] - base, 0, chunk)
+    delta = jnp.zeros((chunk + 1,), jnp.int32).at[start_pos].add(1)
+    block = jnp.cumsum(delta[:chunk]) - 1
+    block = jnp.clip(block, 0, cum.shape[0] - 2)
+    local = jnp.where(valid, slots, 0) - cum[block]
+    n = size[block]
+    i, j = _tri_decode(local, n, steps, use_kernel, interpret)
+    s0 = start[block]
+    a = members[s0 + i]
+    b = members[s0 + j]
+    return (jnp.minimum(a, b), jnp.maximum(a, b), n, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "use_kernel", "interpret"))
+def decode_block_local(start: jnp.ndarray, size: jnp.ndarray,
+                       members: jnp.ndarray, block: jnp.ndarray,
+                       local: jnp.ndarray, valid: jnp.ndarray,
+                       *, steps: int = MAX_SEARCH_STEPS,
+                       use_kernel: bool = False, interpret: bool = True):
+    """Decode pre-split (block, local) slots (sampling fallback path)."""
+    block = jnp.clip(block, 0, size.shape[0] - 1)
+    n = size[block]
+    i, j = _tri_decode(local, n, steps, use_kernel, interpret)
+    s0 = start[block]
+    a = members[s0 + i]
+    b = members[s0 + j]
+    return (jnp.minimum(a, b), jnp.maximum(a, b), n, valid)
+
+
+# ---------------------------------------------------------------------------
+# Largest-block-wins dedupe: one sort + segment-start winner mask
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def pack_sort_words(a: jnp.ndarray, b: jnp.ndarray, src_size: jnp.ndarray,
+                    valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(a, b, size) -> uint32 limb pair (hi, lo) of the 62-bit sort word.
+
+    Word = (a << 39) | (b << 16) | (MAX_BLOCK_N - size): ascending word
+    order is (a, b) ascending with size DESCENDING inside each (a, b) run,
+    so after any u64 sort the first element of a run is the largest-block
+    winner. Invalid lanes become the all-ones sentinel (> any valid word).
+    Requires a, b < 2**PACK_RID_BITS and size <= MAX_BLOCK_N.
+    """
+    au = a.astype(jnp.uint32)
+    bu = b.astype(jnp.uint32)
+    inv = (_SIZE_MASK - jnp.clip(src_size, 0, _SIZE_MASK)).astype(jnp.uint32)
+    hi = (au << 7) | (bu >> 16)
+    lo = (bu << 16) | inv
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    return (jnp.where(valid, hi, sentinel), jnp.where(valid, lo, sentinel))
+
+
+def dedupe_packed_host(hi: np.ndarray, lo: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host sort of packed words -> compacted (a, b, src_size) winners.
+
+    ``np.sort`` on the single u64 word replaces XLA CPU's comparator
+    sort; used by the driver when running on the CPU backend (host memory
+    IS device memory there, so this costs no extra transfer).
+    """
+    w = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+    w = np.sort(w)
+    w = w[: np.searchsorted(w, np.uint64(1) << np.uint64(62))]  # drop sentinels
+    if len(w) == 0:
+        z = np.zeros((0,), np.int64)
+        return z, z, z
+    run = w >> np.uint64(_PACK_SIZE_BITS)  # the (a, b) part
+    first = np.concatenate([[True], run[1:] != run[:-1]])
+    w = w[first]
+    a = (w >> np.uint64(39)).astype(np.int64)
+    b = ((w >> np.uint64(16)) & np.uint64((1 << PACK_RID_BITS) - 1)).astype(np.int64)
+    s = (np.uint64(_SIZE_MASK) - (w & np.uint64(_SIZE_MASK))).astype(np.int64)
+    return a, b, s
+
+
+@jax.jit
+def dedupe_device(a: jnp.ndarray, b: jnp.ndarray, src_size: jnp.ndarray,
+                  valid: jnp.ndarray):
+    """Device sort (a, b, size desc); mark each pair's largest-block winner.
+
+    General-rid path (no PACK_RID_BITS bound): a 3-key ``lax.sort``.
+    Returns (a_sorted, b_sorted, size_sorted, winner_mask); invalid lanes
+    carry (INT32_MAX, INT32_MAX) keys, sort to the tail, and are never
+    winners. Host compacts by the mask.
+    """
+    av = jnp.where(valid, a, _INT32_MAX)
+    bv = jnp.where(valid, b, _INT32_MAX)
+    skey = _INT32_MAX - jnp.where(valid, src_size, 0)  # ascending = size desc
+    sa, sb, ss = jax.lax.sort((av, bv, skey), num_keys=3)
+    live = ~((sa == _INT32_MAX) & (sb == _INT32_MAX))
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool),
+         (sa[1:] != sa[:-1]) | (sb[1:] != sb[:-1])])
+    return sa, sb, _INT32_MAX - ss, live & first

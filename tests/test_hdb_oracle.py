@@ -11,7 +11,7 @@ max-keys guards, the oversize-key cap).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import blocks, hdb, oracle
 from repro.core.blocks import ColumnBlocking, TokenColumn

@@ -1,0 +1,255 @@
+"""Oracle tests for the device-side pair materialization engine.
+
+The numpy (shift-method reference), JAX, and Pallas (interpret) backends
+must emit BIT-IDENTICAL deduped PairSets — including the budget-exceeded
+uniform-sampling fallback and the largest-block-wins provenance — on
+randomized block layouts. The triangular decode kernel is additionally
+checked against the float64 closed-form oracle at the int32 contract
+boundary (n = MAX_BLOCK_N).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.core import blocks as blocks_mod, hdb, pairs
+from repro.core.distributed import materialize_pairs_distributed
+from repro.kernels.pairs import (MAX_BLOCK_N, decode_chunk, dedupe_device,
+                                 tri_decode_jnp, tri_decode_pallas)
+from repro.kernels.pairs import ref as pairs_ref
+from repro.data import synthetic
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _random_blocks(seed, n_blocks, max_size, universe):
+    """Random CSR Blocks with heavy membership overlap (cross-block dupes)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(2, max_size + 1, n_blocks).astype(np.int64)
+    start = np.concatenate([[0], np.cumsum(sizes)])[:-1]
+    members = np.concatenate(
+        [np.sort(rng.choice(universe, n, replace=False)) for n in sizes]
+    ).astype(np.int64)
+    zu = np.zeros(n_blocks, np.uint32)
+    return pairs.Blocks(zu, zu, start, sizes, members)
+
+
+def _assert_pairsets_equal(got, want, label):
+    assert got.exact == want.exact, label
+    assert got.total_slots == want.total_slots, label
+    np.testing.assert_array_equal(got.a, want.a, err_msg=label)
+    np.testing.assert_array_equal(got.b, want.b, err_msg=label)
+    np.testing.assert_array_equal(got.src_size, want.src_size, err_msg=label)
+
+
+# ---------------------------------------------------------------------------
+# backend parity on randomized layouts
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_blocks=st.sampled_from([1, 7, 40]),
+       max_size=st.sampled_from([3, 16, 48]))
+def test_backends_agree_exact(seed, n_blocks, max_size):
+    blk = _random_blocks(seed, n_blocks, max_size, universe=400)
+    want = pairs.dedupe_pairs(blk, backend="numpy")
+    assert want.exact
+    # exact results are the distinct-pair set: cross-check count bounds
+    assert 0 < len(want.a) <= blk.num_pair_slots
+    for be in ("jax", "pallas"):
+        got = pairs.dedupe_pairs(blk, backend=be)
+        _assert_pairsets_equal(got, want, f"backend={be} seed={seed}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_backends_agree_sampling_fallback(seed):
+    blk = _random_blocks(seed, 30, 40, universe=300)
+    budget = blk.num_pair_slots // 3
+    want = pairs.dedupe_pairs(blk, budget=budget, backend="numpy",
+                              sample_seed=seed)
+    assert not want.exact
+    assert want.total_slots == blk.num_pair_slots  # counting stays exact
+    assert len(want.a) <= budget
+    for be in ("jax", "pallas"):
+        got = pairs.dedupe_pairs(blk, budget=budget, backend=be,
+                                 sample_seed=seed)
+        _assert_pairsets_equal(got, want, f"backend={be} seed={seed}")
+
+
+def test_sampling_is_deterministic_and_seed_sensitive():
+    blk = _random_blocks(0, 30, 40, universe=300)
+    budget = blk.num_pair_slots // 4
+    p1 = pairs.dedupe_pairs(blk, budget=budget, backend="jax", sample_seed=7)
+    p2 = pairs.dedupe_pairs(blk, budget=budget, backend="jax", sample_seed=7)
+    p3 = pairs.dedupe_pairs(blk, budget=budget, backend="jax", sample_seed=8)
+    np.testing.assert_array_equal(p1.a, p2.a)
+    np.testing.assert_array_equal(p1.b, p2.b)
+    assert len(p1.a) != len(p3.a) or not np.array_equal(p1.a, p3.a)
+
+
+# ---------------------------------------------------------------------------
+# largest-block-wins provenance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_largest_block_wins_provenance(backend):
+    # pair (0, 1) appears in a 5-block, a 9-block, and a 3-block
+    groups = [np.arange(5), np.arange(9), np.array([0, 1, 50])]
+    sizes = np.array([len(g) for g in groups], np.int64)
+    start = np.concatenate([[0], np.cumsum(sizes)])[:-1]
+    blk = pairs.Blocks(np.zeros(3, np.uint32), np.zeros(3, np.uint32),
+                       start, sizes,
+                       np.concatenate(groups).astype(np.int64))
+    p = pairs.dedupe_pairs(blk, backend=backend)
+    by_pair = {(a, b): s for a, b, s in zip(p.a, p.b, p.src_size)}
+    assert by_pair[(0, 1)] == 9          # largest source block wins
+    assert by_pair[(0, 50)] == 3         # only source
+    assert by_pair[(5, 8)] == 9
+    # distinct set: the 5-block is a subset of the 9-block
+    assert len(p.a) == 9 * 8 // 2 + 2    # C(9,2) + (0,50) + (1,50)
+
+
+# ---------------------------------------------------------------------------
+# triangular decode kernel at the contract boundary
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 3, 17, 1000, MAX_BLOCK_N])
+def test_tri_decode_matches_oracle_at_boundaries(n):
+    last = n * (n - 1) // 2 - 1
+    t = np.unique(np.clip(
+        np.array([0, 1, n - 2, n - 1, last // 2, last - 1, last]), 0, last))
+    n_arr = np.full(len(t), n, np.int64)
+    ri, rj = pairs_ref.tri_decode_ref(t, n_arr)
+    # ref must satisfy the bitmap identity b(i,j,n) == t
+    np.testing.assert_array_equal(pairs.pair_bit_index(ri, rj, n), t)
+    gi, gj = tri_decode_jnp(jnp.asarray(t, jnp.int32),
+                            jnp.asarray(n_arr, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(gi), ri)
+    np.testing.assert_array_equal(np.asarray(gj), rj)
+
+
+def test_tri_decode_pallas_matches_jnp_dense():
+    rng = np.random.default_rng(0)
+    n = rng.integers(2, 300, 4096).astype(np.int64)
+    t = (rng.random(4096) * (n * (n - 1) // 2)).astype(np.int64)
+    ji, jj = tri_decode_jnp(jnp.asarray(t, jnp.int32), jnp.asarray(n, jnp.int32))
+    pi, pj = tri_decode_pallas(jnp.asarray(t, jnp.int32).reshape(-1, 128),
+                               jnp.asarray(n, jnp.int32).reshape(-1, 128),
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(pi).reshape(-1), np.asarray(ji))
+    np.testing.assert_array_equal(np.asarray(pj).reshape(-1), np.asarray(jj))
+
+
+def test_decode_chunk_validity_immune_to_int32_wrap():
+    """Padding lanes past total near 2**31 must stay invalid even though
+    base + offset wraps int32 (regression: wrapped-negative slots used to
+    pass the `slots < total` check)."""
+    total = 2**31 - 100
+    # a single synthetic block table; only validity counting matters here
+    cum = jnp.asarray([0, total], jnp.int32)
+    start = jnp.zeros(1, jnp.int32)
+    size = jnp.asarray([3], jnp.int32)
+    members = jnp.asarray([0, 1, 2], jnp.int32)
+    base = total - 512
+    _, _, _, v = decode_chunk(cum, start, size, members,
+                              jnp.int32(base), jnp.int32(total), chunk=1024)
+    v = np.asarray(v)
+    assert v.sum() == 512 and v[:512].all() and not v[512:].any()
+
+
+def test_decode_chunk_masks_out_of_range_slots():
+    blk = _random_blocks(1, 4, 6, universe=50)
+    total = blk.num_pair_slots
+    cum = jnp.asarray(pairs_ref.cum_pair_counts(blk.size), jnp.int32)
+    a, b, s, v = decode_chunk(
+        cum, jnp.asarray(blk.start, jnp.int32), jnp.asarray(blk.size, jnp.int32),
+        jnp.asarray(blk.members, jnp.int32), jnp.int32(0), jnp.int32(total),
+        chunk=1024)
+    v = np.asarray(v)
+    assert v.sum() == total and not v[total:].any()
+
+
+def test_dedupe_device_pushes_invalid_to_tail():
+    a = jnp.asarray([5, 3, 3, 9], jnp.int32)
+    b = jnp.asarray([6, 4, 4, 11], jnp.int32)
+    s = jnp.asarray([2, 7, 3, 2], jnp.int32)
+    valid = jnp.asarray([True, True, True, False])
+    sa, sb, ss, w = dedupe_device(a, b, s, valid)
+    w = np.asarray(w)
+    assert w.sum() == 2
+    np.testing.assert_array_equal(np.asarray(sa)[w], [3, 5])
+    np.testing.assert_array_equal(np.asarray(ss)[w], [7, 2])  # largest wins
+
+
+# ---------------------------------------------------------------------------
+# integration: HDB result -> blocks -> engine; distributed decode
+# ---------------------------------------------------------------------------
+
+
+def test_engine_on_real_hdb_blocks():
+    corpus = synthetic.generate(synthetic.SyntheticSpec(num_entities=150, seed=2))
+    keys, valid = blocks_mod.build_keys(corpus.columns, corpus.blocking)
+    res = hdb.hashed_dynamic_blocking(keys, valid,
+                                      hdb.HDBConfig(max_block_size=25))
+    blk = pairs.build_blocks(res)
+    want = pairs.dedupe_pairs(blk, backend="numpy")
+    for be in ("jax", "pallas"):
+        _assert_pairsets_equal(pairs.dedupe_pairs(blk, backend=be), want, be)
+
+
+def test_distributed_materialization_matches_single_device():
+    blk = _random_blocks(4, 50, 30, universe=600)
+    mesh = jax.make_mesh((1,), ("data",))
+    got = materialize_pairs_distributed(blk, mesh, ("data",),
+                                        chunk_per_shard=2048)
+    want = pairs.dedupe_pairs(blk, backend="numpy")
+    _assert_pairsets_equal(got, want, "distributed")
+
+
+def test_enumerate_pairs_streams_all_slots():
+    blk = _random_blocks(5, 20, 20, universe=200)
+    for be in BACKENDS:
+        tot = 0
+        for a, b, s in pairs.enumerate_pairs(blk, backend=be,
+                                             chunk_pairs=2048):
+            assert np.all(a < b)
+            tot += len(a)
+        assert tot == blk.num_pair_slots, be
+
+
+def test_oversize_blocks_fall_back_to_numpy():
+    # a block larger than MAX_BLOCK_N breaks the int32 contract
+    n = MAX_BLOCK_N + 1
+    blk = pairs.Blocks(np.zeros(1, np.uint32), np.zeros(1, np.uint32),
+                       np.zeros(1, np.int64), np.array([n], np.int64),
+                       np.arange(n, dtype=np.int64))
+    with pytest.warns(RuntimeWarning, match="MAX_BLOCK_N"):
+        p = pairs.dedupe_pairs(blk, budget=1000, backend="jax")
+    assert not p.exact and len(p.a) <= 1000
+
+
+def test_backends_agree_beyond_pack_rid_bound():
+    """rids >= 2**PACK_RID_BITS force the general lax.sort dedupe path,
+    which must still match the numpy reference exactly."""
+    from repro.kernels.pairs import PACK_RID_BITS
+    blk = _random_blocks(9, 12, 10, universe=200)
+    big = pairs.Blocks(blk.key_hi, blk.key_lo, blk.start, blk.size,
+                       blk.members + (1 << PACK_RID_BITS))
+    want = pairs.dedupe_pairs(big, backend="numpy")
+    got = pairs.dedupe_pairs(big, backend="jax")
+    _assert_pairsets_equal(got, want, "big-rid general dedupe")
+
+
+def test_empty_blocks():
+    z64 = np.zeros((0,), np.int64)
+    zu = np.zeros((0,), np.uint32)
+    blk = pairs.Blocks(zu, zu, z64, z64, z64)
+    for be in BACKENDS:
+        p = pairs.dedupe_pairs(blk, backend=be)
+        assert p.exact and len(p.a) == 0 and p.total_slots == 0
