@@ -3,9 +3,13 @@ Blocking and inspect the quality metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import logging
 import sys
 
 sys.path.insert(0, "src")
+
+# per-iteration [hdb] stats flow through logging (verbose=True -> INFO)
+logging.basicConfig(level=logging.INFO, format="%(message)s")
 
 from repro.core import blocks, hdb, pairs
 from repro.data import metrics, synthetic

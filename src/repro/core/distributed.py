@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import warnings
 from typing import List, Optional, Sequence, Tuple
 
@@ -39,6 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import hashing, segments, sketches, u64
 from .hdb import (BlockingResult, HDBConfig, INT32_MAX, IterationStats,
                   RepCapacityWarning, intersect_keys)
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,8 +281,8 @@ def distributed_hashed_dynamic_blocking(
         acc_lo.append(keys_np[ridx, kidx, 1])
         st = IterationStats(iteration=it, **{k: int(v) for k, v in stats.items()})
         all_stats.append(st)
-        if verbose:
-            print(f"[hdb-dist] iter={it} {st}")
+        logger.log(logging.INFO if verbose else logging.DEBUG,
+                   "[hdb-dist] iter=%d %s", it, st)
         if st.rep_overflow:
             warnings.warn(
                 f"[hdb-dist] buffer overflow ({st.rep_overflow} entries "

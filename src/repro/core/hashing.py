@@ -70,6 +70,34 @@ def fingerprint_rid(rid: jnp.ndarray) -> U64:
 _MASK64 = (1 << 64) - 1
 
 
+def np_mix64_vec(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer on a uint64 array (mirrors mix64).
+
+    Bit-exact with the jnp limb-pair path; the streaming BlockStore uses it
+    to maintain CMS bucket indices and membership fingerprints host-side
+    without a device round trip per delta.
+    """
+    x = x.astype(np.uint64)
+    x = x ^ (x >> np.uint64(30))
+    x = (x * np.uint64(_M1)) & np.uint64(_MASK64)
+    x = x ^ (x >> np.uint64(27))
+    x = (x * np.uint64(_M2)) & np.uint64(_MASK64)
+    x = x ^ (x >> np.uint64(31))
+    return x
+
+
+def np_hash_u64_vec(x: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Vectorized seeded hash of a uint64 array (mirrors hash_u64)."""
+    gamma = ((seed + 1) * _GAMMA) & _MASK64
+    return np_mix64_vec(x.astype(np.uint64) + np.uint64(gamma))
+
+
+def np_fingerprint_rid(rid: np.ndarray) -> np.ndarray:
+    """Vectorized uint64 mirror of fingerprint_rid (same 0xB10C seed)."""
+    rid32 = rid.astype(np.uint32).astype(np.uint64)
+    return np_hash_u64_vec(rid32, seed=0xB10C)
+
+
 def np_mix64(x: int) -> int:
     x &= _MASK64
     x ^= x >> 30

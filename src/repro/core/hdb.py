@@ -101,18 +101,81 @@ class BlockingResult:
 # ---------------------------------------------------------------------------
 
 
-def rough_oversize_detection(cfg: HDBConfig, key: U64, valid: jnp.ndarray,
-                             psize: jnp.ndarray):
-    """Algorithm 3. Returns (right_mask, keep_mask, approx_counts)."""
-    flat_key = (key[0].reshape(-1), key[1].reshape(-1))
-    flat_valid = valid.reshape(-1)
-    cms = sketches.cms_build(cfg.cms, flat_key, flat_valid)
-    s = sketches.cms_query(cfg.cms, cms, flat_key).reshape(valid.shape)
+def rough_classify(cfg: HDBConfig, s: jnp.ndarray, valid: jnp.ndarray,
+                   psize: jnp.ndarray):
+    """Algorithm 3 decision rule, given CMS estimates ``s``.
+
+    Shared by the batch iteration (which builds the CMS from the live
+    entries it is classifying) and the streaming delta path (which queries
+    the persistent fold-in CMS held by a BlockStore): both must apply the
+    same float32 progress comparison bit-for-bit for the incremental
+    result to reproduce the batch result exactly.
+
+    Returns (right_mask, keep_mask, dropped_similarity_mask).
+    """
     right = valid & (s <= cfg.max_block_size)
     progress = s.astype(jnp.float32) <= cfg.max_similarity * psize.astype(jnp.float32)
     keep = valid & ~right & progress
     dropped_sim = valid & ~right & ~progress
+    return right, keep, dropped_sim
+
+
+def rough_oversize_detection(cfg: HDBConfig, key: U64, valid: jnp.ndarray,
+                             psize: jnp.ndarray):
+    """Algorithm 3. Returns (right_mask, keep_mask, dropped_mask, approx_counts)."""
+    flat_key = (key[0].reshape(-1), key[1].reshape(-1))
+    flat_valid = valid.reshape(-1)
+    cms = sketches.cms_build(cfg.cms, flat_key, flat_valid)
+    s = sketches.cms_query(cfg.cms, cms, flat_key).reshape(valid.shape)
+    right, keep, dropped_sim = rough_classify(cfg, s, valid, psize)
     return right, keep, dropped_sim, s
+
+
+def dedupe_oversized_reps(r_xhi: jnp.ndarray, r_xlo: jnp.ndarray,
+                          r_sz: jnp.ndarray, r_khi: jnp.ndarray,
+                          r_klo: jnp.ndarray):
+    """Deduplicate over-sized block representatives (Alg. 4 lines 6-9).
+
+    One representative per over-sized block, described by its membership
+    fingerprint ``(r_xhi, r_xlo)``, exact size ``r_sz`` and block key
+    ``(r_khi, r_klo)``; invalid lanes carry sentinel keys/fingerprints and
+    ``INT32_MAX`` size. Blocks with identical (fingerprint, size) are
+    duplicates; the smallest key of each group survives.
+
+    Shared by the batch iteration (reps extracted from the global sort)
+    and the streaming delta path (reps taken from the BlockStore key
+    table). Returns:
+      table: ((t_khi, t_klo), t_sz) survivor keys sorted by key
+      n_dup: number of duplicate representatives dropped
+      survivor_in: bool mask aligned with the INPUT lanes marking survivors
+    """
+    m = r_khi.shape[0]
+    orig = jnp.arange(m, dtype=jnp.int32)
+    # sort by (xor, size, key): duplicates (same membership) become adjacent;
+    # the smallest key of each duplicate group survives (full lexicographic
+    # sort makes the survivor deterministic).
+    r_xhi, r_xlo, r_sz, r_khi, r_klo, orig = jax.lax.sort(
+        (r_xhi, r_xlo, r_sz, r_khi, r_klo, orig), num_keys=5)
+    same_prev = (
+        (r_xhi == jnp.roll(r_xhi, 1)) & (r_xlo == jnp.roll(r_xlo, 1))
+        & (r_sz == jnp.roll(r_sz, 1)))
+    same_prev = same_prev.at[0].set(False)
+    rep_valid_sorted = ~((r_khi == jnp.uint32(0xFFFFFFFF)) & (r_klo == jnp.uint32(0xFFFFFFFF)))
+    survivor = rep_valid_sorted & ~same_prev
+    n_dup = jnp.sum((rep_valid_sorted & same_prev).astype(jnp.int32))
+
+    # survivor table sorted by key for O(log) lookups (the paper's
+    # "broadcasted counts map")
+    t_khi = jnp.where(survivor, r_khi, jnp.uint32(0xFFFFFFFF))
+    t_klo = jnp.where(survivor, r_klo, jnp.uint32(0xFFFFFFFF))
+    t_sz = jnp.where(survivor, r_sz, 0)
+    t_khi, t_klo, t_sz = jax.lax.sort((t_khi, t_klo, t_sz), num_keys=2)
+    table = ((t_khi, t_klo), t_sz)
+    survivor_in = jnp.zeros((m,), bool).at[orig].set(survivor)
+    return table, n_dup, survivor_in
+
+
+survivor_reps = jax.jit(dedupe_oversized_reps)
 
 
 def exactly_count_and_dedupe(cfg: HDBConfig, key: U64, keep: jnp.ndarray):
@@ -154,26 +217,9 @@ def exactly_count_and_dedupe(cfg: HDBConfig, key: U64, keep: jnp.ndarray):
     r_sz = jnp.where(rep_valid, sizes[rep_idx], INT32_MAX)
     r_khi = jnp.where(rep_valid, shi[rep_idx], jnp.uint32(0xFFFFFFFF))
     r_klo = jnp.where(rep_valid, slo[rep_idx], jnp.uint32(0xFFFFFFFF))
-    # sort by (xor, size, key): duplicates (same membership) become adjacent;
-    # the smallest key of each duplicate group survives (full lexicographic
-    # sort makes the survivor deterministic).
-    r_xhi, r_xlo, r_sz, r_khi, r_klo = jax.lax.sort(
-        (r_xhi, r_xlo, r_sz, r_khi, r_klo), num_keys=5)
-    same_prev = (
-        (r_xhi == jnp.roll(r_xhi, 1)) & (r_xlo == jnp.roll(r_xlo, 1))
-        & (r_sz == jnp.roll(r_sz, 1)))
-    same_prev = same_prev.at[0].set(False)
-    survivor = rep_valid_sorted = ~((r_khi == jnp.uint32(0xFFFFFFFF)) & (r_klo == jnp.uint32(0xFFFFFFFF)))
-    survivor = survivor & ~same_prev
-    n_dup = jnp.sum((rep_valid_sorted & same_prev).astype(jnp.int32))
-
-    # survivor table sorted by key for O(log) lookups (the paper's
-    # "broadcasted counts map")
-    t_khi = jnp.where(survivor, r_khi, jnp.uint32(0xFFFFFFFF))
-    t_klo = jnp.where(survivor, r_klo, jnp.uint32(0xFFFFFFFF))
-    t_sz = jnp.where(survivor, r_sz, 0)
-    t_khi, t_klo, t_sz = jax.lax.sort((t_khi, t_klo, t_sz), num_keys=2)
-    table = ((t_khi, t_klo), t_sz)
+    table, n_dup, survivor = dedupe_oversized_reps(r_xhi, r_xlo, r_sz,
+                                                   r_khi, r_klo)
+    (t_khi, t_klo), t_sz = table
 
     # classify sorted entries: over-sized entries survive iff their key is in
     # the survivor table (duplicates' keys are absent -> dropped).
@@ -294,8 +340,8 @@ def hashed_dynamic_blocking(
         acc_lo.append(keys_np[ridx, kidx, 1])
         st = IterationStats(iteration=it, **{k: int(v) for k, v in stats.items()})
         all_stats.append(st)
-        if verbose:
-            print(f"[hdb] iter={it} {st}")
+        logger.log(logging.INFO if verbose else logging.DEBUG,
+                   "[hdb] iter=%d %s", it, st)
         if st.rep_overflow:
             warnings.warn(
                 f"[hdb] representative capacity overflow ({st.rep_overflow} "

@@ -159,6 +159,17 @@ class PairSet:
     src_size: np.ndarray   # (P,) int64 size of largest block producing the pair
     exact: bool            # False => uniform slot sampling (budget exceeded)
     total_slots: int       # sum C(n,2) before dedupe
+    # device-resident (a, b) from the device dedupe path, when it ran —
+    # lets the matcher consume the pair buffer without a host round trip
+    device_a: Optional[jax.Array] = None
+    device_b: Optional[jax.Array] = None
+
+    def pair_buffers(self):
+        """(a, b) as device arrays; zero-copy when the device engine
+        produced them, a single upload otherwise."""
+        if self.device_a is not None:
+            return self.device_a, self.device_b
+        return jnp.asarray(self.a), jnp.asarray(self.b)
 
 
 # ---------------------------------------------------------------------------
@@ -308,21 +319,22 @@ def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
             out_a.append(a); out_b.append(b); out_s.append(s); out_v.append(v)
     if not out_a:
         z = np.zeros((0,), np.int64)
-        return z, z, z
+        return z, z, z, None
     if jax.default_backend() == "cpu" and _packable(blocks):
         his, los = [], []
         for a, b, s, v in zip(out_a, out_b, out_s, out_v):
             hi, lo = pairs_kernels.pack_sort_words(a, b, s, v)
             his.append(np.asarray(hi)); los.append(np.asarray(lo))
         return pairs_kernels.dedupe_packed_host(
-            np.concatenate(his), np.concatenate(los))
+            np.concatenate(his), np.concatenate(los)) + (None,)
     sa, sb, ss, winner = pairs_kernels.dedupe_device(
         jnp.concatenate(out_a), jnp.concatenate(out_b),
         jnp.concatenate(out_s), jnp.concatenate(out_v))
     w = np.asarray(winner)
-    return (np.asarray(sa)[w].astype(np.int64),
-            np.asarray(sb)[w].astype(np.int64),
-            np.asarray(ss)[w].astype(np.int64))
+    dev = (sa[w], sb[w])  # compact on device; host copies below share it
+    return (np.asarray(dev[0]).astype(np.int64),
+            np.asarray(dev[1]).astype(np.int64),
+            np.asarray(ss)[w].astype(np.int64), dev)
 
 
 def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
@@ -344,11 +356,14 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
     backend = _resolve_backend(backend, blocks, budget)
     if backend == "numpy":
         a, b, s = _dedupe_numpy(blocks, slots)
+        dev = None
     else:
-        a, b, s = _dedupe_device(blocks, slots, total, chunk_pairs,
-                                 use_kernel=(backend == "pallas"),
-                                 interpret=interpret)
-    return PairSet(a, b, s, exact, total)
+        a, b, s, dev = _dedupe_device(blocks, slots, total, chunk_pairs,
+                                      use_kernel=(backend == "pallas"),
+                                      interpret=interpret)
+    return PairSet(a, b, s, exact, total,
+                   device_a=None if dev is None else dev[0],
+                   device_b=None if dev is None else dev[1])
 
 
 def enumerate_pairs(blocks: Blocks, backend: str = "auto",

@@ -18,6 +18,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import u64, hashing
 from .u64 import U64
@@ -63,6 +64,57 @@ def cms_query(cfg: CMSConfig, sketch: jnp.ndarray, key: U64) -> jnp.ndarray:
 def cms_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """CMS is a linear sketch: merging = elementwise add (== psum)."""
     return a + b
+
+
+def cms_fold(global_sketch, delta_sketch):
+    """Fold a delta-batch sketch into a persistent global sketch.
+
+    This one-liner is the core streaming-ingest argument: because the CMS
+    is linear, the sketch of (corpus ∪ delta) is EXACTLY
+    ``cms(corpus) + cms(delta)`` — no rebuild over the historical corpus,
+    no approximation beyond what the CMS already carries. Works on jnp or
+    np arrays (int add either way).
+    """
+    return global_sketch + delta_sketch
+
+
+def cms_subtract(global_sketch, delta_sketch):
+    """Remove previously-folded entries (linear sketch: subtraction).
+
+    Exact — not the lossy "deletion" of probabilistic filters — because
+    every removed entry was added with the same +1 updates, so counts
+    stay the true non-negative bucket sums. The streaming delta blocker
+    relies on this to retract a record's old key entries when its live
+    key set changes between iterations.
+    """
+    return global_sketch - delta_sketch
+
+
+def cms_decay(sketch, shift: int = 1):
+    """Exponential decay hook for long-running streaming services.
+
+    Halves every bucket ``shift`` times (integer right-shift). Ages out
+    stale mass so a bounded-width CMS can run indefinitely under churn.
+    NOTE: decay breaks the never-undercounts guarantee for entries that
+    survive the decay, so exact batch/stream parity holds only between
+    decay events; production use pairs this with re-ingesting live keys.
+    """
+    return sketch >> shift
+
+
+def np_cms_indices(cfg: CMSConfig, key64) -> "np.ndarray":
+    """Host mirror of cms_indices on packed uint64 keys.
+
+    Bit-exact with the jnp path (same splitmix seeds 0xC0DE+j, same
+    width mask); lets the streaming store compute bucket indices for
+    delta entries without staging them through the device.
+    """
+    key64 = np.asarray(key64, np.uint64)
+    idx = np.empty((cfg.depth,) + key64.shape, np.int32)
+    for j in range(cfg.depth):
+        h = hashing.np_hash_u64_vec(key64, seed=0xC0DE + j)
+        idx[j] = (h & np.uint64(cfg.width - 1)).astype(np.int32)
+    return idx
 
 
 # ---------------------------------------------------------------------------

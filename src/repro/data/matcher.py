@@ -53,20 +53,42 @@ def _score_batch(tokens, masks, weights, a, b):
     return jnp.where(norm > 0, total / jnp.maximum(norm, 1e-6), 0.0)
 
 
-def score_pairs(columns: Dict[str, TokenColumn], a: np.ndarray, b: np.ndarray,
+def score_pairs(columns: Dict[str, TokenColumn], a, b,
                 cfg: MatcherConfig = MatcherConfig(),
                 batch: int = 65536) -> np.ndarray:
-    """Similarity in [0,1] for each candidate pair."""
+    """Similarity in [0,1] for each candidate pair.
+
+    ``a``/``b`` may be host numpy arrays OR device jax arrays — e.g. the
+    pair engine's ``PairSet.pair_buffers()`` or a streaming ingest's new
+    pair buffer. Device inputs are sliced device-side (no forced host
+    copy of the full pair list); only the scores come back to the host.
+    Slices are padded to power-of-two buckets (capped at ``batch``) so a
+    long-running service compiles a bounded set of kernels per column
+    schema instead of one per pair-count.
+    """
     names = [n for n, _ in cfg.weights if n in columns]
     tokens = tuple(columns[n].tokens for n in names)
     masks = tuple(columns[n].mask for n in names)
     weights = tuple(w for n, w in cfg.weights if n in columns)
-    out = np.empty(len(a), np.float32)
-    for off in range(0, len(a), batch):
-        sl = slice(off, off + batch)
-        out[sl] = np.asarray(_score_batch(
-            tokens, masks, weights,
-            jnp.asarray(a[sl], jnp.int32), jnp.asarray(b[sl], jnp.int32)))
+    n_pairs = int(a.shape[0])
+    out = np.empty(n_pairs, np.float32)
+    xp = jnp if isinstance(a, jax.Array) else np
+    for off in range(0, n_pairs, batch):
+        sl = slice(off, min(off + batch, n_pairs))
+        m = sl.stop - sl.start
+        bucket = 256
+        while bucket < m:
+            bucket *= 2
+        bucket = min(bucket, batch)
+        aa = xp.asarray(a[sl])
+        bb = xp.asarray(b[sl])
+        if bucket > m:
+            aa = xp.pad(aa, (0, bucket - m))
+            bb = xp.pad(bb, (0, bucket - m))
+        got = _score_batch(tokens, masks, weights,
+                           jnp.asarray(aa, jnp.int32),
+                           jnp.asarray(bb, jnp.int32))
+        out[sl] = np.asarray(got)[:m]
     return out
 
 

@@ -3,17 +3,21 @@
     normalize -> BLOCK (HDB, the paper's contribution) -> pairwise match
     -> graph partition -> canonical records -> token stream -> batches
 
-``dedup_corpus`` runs stages 2-4 and returns one surviving record per
-entity-component. ``DedupPipeline`` additionally exposes the result as a
-deterministic, shardable training-batch stream (see loader.py) so any
-model in the zoo trains on deduplicated data (`--dedup`).
+``dedup_corpus`` runs stages 2-4 batch-mode and returns one surviving
+record per entity-component. ``DedupPipeline`` is the streaming-consistent
+form: it holds a persistent ``streaming.BlockStore`` so ``extend(delta)``
+absorbs new records incrementally — blocking work proportional to the
+delta, matching only the new candidate pairs (scored from the device pair
+buffer), retraction-aware — and exposes the current survivors for the
+training-batch stream (see loader.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import blocks as blocks_mod
@@ -56,7 +60,10 @@ def dedup_corpus(corpus: Corpus,
     blk = pairs_mod.build_blocks(result)
     pset = pairs_mod.dedupe_pairs(blk, budget=pair_budget)
     t1 = time.perf_counter()
-    matched = matcher.match_pairs(corpus.columns, pset.a, pset.b, match_cfg)
+    # feed the matcher the device pair buffer directly (no host round trip
+    # of the pair list when the device dedupe path produced it)
+    dev_a, dev_b = pset.pair_buffers()
+    matched = matcher.match_pairs(corpus.columns, dev_a, dev_b, match_cfg)
     ma, mb = pset.a[matched], pset.b[matched]
     t2 = time.perf_counter()
     label = components.connected_components(n, ma, mb)
@@ -75,6 +82,74 @@ def dedup_corpus(corpus: Corpus,
         survivors=survivors,
         component_of=label,
     )
+
+
+class DedupPipeline:
+    """Incremental dedup: persistent blocking state + delta matching.
+
+    ``extend(corpus_delta)`` ingests a record delta through the streaming
+    blocker (exact-incremental HDB over the union), scores ONLY the new
+    candidate pairs with the matcher — reading the pair buffer directly —
+    drops matches whose candidate pair was retracted, and re-partitions.
+    The returned ``DedupReport`` always describes the full union.
+    """
+
+    def __init__(self, cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(max_block_size=100),
+                 match_cfg: matcher.MatcherConfig = matcher.MatcherConfig()):
+        from ..streaming import BlockStore, DeltaBlocker  # local: optional dep cycle
+        from ..streaming.engine import ColumnCache
+        self.cfg = cfg
+        self.match_cfg = match_cfg
+        self.store = BlockStore(cfg)
+        self.blocker = DeltaBlocker(self.store)
+        self.blocking: Optional[Dict[str, blocks_mod.ColumnBlocking]] = None
+        self._columns = ColumnCache()
+        # matched pairs as packed a<<32|b, sorted
+        self._matched = np.zeros((0,), np.uint64)
+
+    def extend(self, corpus_delta: Corpus) -> DedupReport:
+        from ..streaming.store import pack_pair, searchsorted_mask, unpack_pair
+        t0 = time.perf_counter()
+        if self.blocking is None:
+            self.blocking = corpus_delta.blocking
+        self._columns.append({name: (np.asarray(col.tokens),
+                                     np.asarray(col.mask))
+                              for name, col in corpus_delta.columns.items()})
+        keys, valid = blocks_mod.build_keys(corpus_delta.columns, self.blocking)
+        report = self.blocker.ingest_keys(np.asarray(keys), np.asarray(valid))
+        t1 = time.perf_counter()
+        a, b, _ = report.pairs_added
+        ra, rb = report.pairs_retracted
+        if len(ra):
+            pos, hit = searchsorted_mask(self._matched, pack_pair(ra, rb))
+            keep = np.ones(len(self._matched), bool)
+            keep[pos[hit]] = False
+            self._matched = self._matched[keep]
+        if len(a):
+            cols = self._columns.columns()
+            matched = matcher.match_pairs(
+                cols, jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32),
+                self.match_cfg)
+            new = pack_pair(a[matched], b[matched])
+            self._matched = np.union1d(self._matched, new)
+        t2 = time.perf_counter()
+        n = self.store.num_records
+        ma, mb = unpack_pair(self._matched)
+        label = components.connected_components(n, ma, mb)
+        survivors = np.unique(label)
+        t3 = time.perf_counter()
+        return DedupReport(
+            num_records=n,
+            num_candidate_pairs=len(self.store.led_pack),
+            num_matched_pairs=len(self._matched),
+            num_components=len(survivors),
+            num_survivors=len(survivors),
+            blocking_seconds=t1 - t0,
+            matching_seconds=t2 - t1,
+            partition_seconds=t3 - t2,
+            survivors=survivors,
+            component_of=label,
+        )
 
 
 def dedup_quality(report: DedupReport, corpus: Corpus) -> dict:

@@ -194,6 +194,16 @@ def generate(spec: SyntheticSpec) -> Corpus:
                   entity_id=entity_id[perm], num_records=n)
 
 
+def corpus_slice(corpus: Corpus, idx: np.ndarray) -> Corpus:
+    """Row-subset view of a corpus (for streaming it in micro-batches)."""
+    idx = np.asarray(idx)
+    cols = {name: TokenColumn(jnp.asarray(np.asarray(c.tokens)[idx]),
+                              jnp.asarray(np.asarray(c.mask)[idx]))
+            for name, c in corpus.columns.items()}
+    return Corpus(columns=cols, blocking=corpus.blocking,
+                  entity_id=corpus.entity_id[idx], num_records=len(idx))
+
+
 def jaccard_pair_corpus(n_pairs: int, jaccard: float, set_size: int = 40,
                         seed: int = 0):
     """Pairs of token sets with (near-)exact Jaccard j — validates the

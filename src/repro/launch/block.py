@@ -15,7 +15,11 @@ if "--dryrun" in os.sys.argv:  # device count must be set before jax init
                                + os.environ.get("XLA_FLAGS", ""))
 
 import argparse      # noqa: E402
+import logging       # noqa: E402
 import time          # noqa: E402
+
+# CLI driver owns logging config; verbose [hdb]/[hdb-dist] stats are INFO
+logging.basicConfig(level=logging.INFO, format="%(message)s")
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402

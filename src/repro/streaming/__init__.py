@@ -1,0 +1,61 @@
+"""Streaming incremental blocking: micro-batch ingest + candidate queries
+over persistent Hashed-Dynamic-Blocking state.
+
+The batch driver (``core/hdb.py``) re-derives everything from scratch per
+run; this package keeps the state resident so records arriving
+continuously cost work proportional to what they *change*, not to the
+corpus. Two operations: ``ingest(records)`` (micro-batch of new rows) and
+``query(record)`` (candidate ids for one probe, serving-style, read-only).
+
+BlockStore memory layout
+------------------------
+
+Everything is dense numpy, host-resident, staged through the same
+fixed-shape jitted functions the batch path uses:
+
+- **Per iteration level i** (``store.levels[i]``): the union's iteration
+  state exactly as batch HDB would hold it entering iteration ``i`` —
+  ``(R_i, W_i)`` key/valid/psize arrays over live rows (rows sorted by
+  rid; ``W_0`` = top-level key width, ``W_{i+1} = C(min(max_oversize_keys,
+  W_i), 2)``), the cached decision bits (right/keep/accept/survive) and
+  per-entry exact block sizes, the level's Count-Min Sketch with cached
+  per-entry bucket indices, and the key table: sorted u64 key -> (exact
+  keep-entry count, XOR-of-rid-fingerprints membership hash, survivor
+  flag), i.e. the incremental mirror of Algorithm 4's sort.
+- **Accepted-blocks CSR**: sorted block keys -> member-rid runs — the
+  live equivalent of ``pairs.build_blocks`` on a batch result, spliced
+  per ingest only where membership changed.
+- **Candidate-pair ledger**: packed ``a << 32 | b`` u64 -> largest source
+  block size — the live equivalent of ``pairs.dedupe_pairs``; each ingest
+  returns exactly the pairs added/retracted.
+
+Why the CMS makes this work (the fold-in argument)
+--------------------------------------------------
+
+Algorithm 3's rough over-size detection is the one global, approximate
+stage — its decisions depend on every live entry in the corpus, which is
+what usually forces a full re-run. But the Count-Min Sketch is a *linear*
+sketch: ``cms(union) == cms(corpus) + cms(delta)`` exactly, bucket by
+bucket, and removal is subtraction (``sketches.cms_fold`` /
+``cms_subtract``). So a micro-batch folds into the global sketch with one
+``+`` — no rebuild — and, because the store caches every entry's bucket
+indices, the entries whose estimate could possibly have moved are exactly
+those hashing into a touched bucket. Only they are re-classified (through
+the same jitted ``hdb.rough_classify``), and only rows whose surviving
+over-sized key set changed are re-intersected. The result after any
+ingest sequence is bit-identical to one batch run on the union — the
+streaming property tests assert it pair-for-pair.
+
+Front-end
+---------
+
+``StreamingEngine`` wraps a store + delta blocker behind a slot scheduler
+modeled on ``serving/engine.py``: submissions queue host-side, ``step()``
+drains one fixed-size micro-batch (padded, so ingest batches and query
+probes of any size reuse one compiled step family without recompiles),
+and results carry the per-ingest pair deltas, optionally matcher-scored
+straight from the device pair buffers.
+"""
+from .store import BlockStore, LevelState  # noqa: F401
+from .delta import DeltaBlocker, IngestReport, QueryResult  # noqa: F401
+from .engine import StreamingEngine, RecordBatch  # noqa: F401

@@ -1,0 +1,686 @@
+"""DeltaBlocker: exact-incremental HDB iterations over a BlockStore.
+
+Per micro-batch the blocker replays Algorithms 1-4 **only where the delta
+can have changed a decision**, level by level:
+
+1. fold the delta rows' (record, key) entries into the level's CMS
+   (linear sketch: ``+`` in, ``-`` out — no rebuild) and mark the touched
+   buckets,
+2. re-estimate ONLY entries that hash into a touched bucket (cached
+   bucket indices make this a gather, not a re-hash) and re-run the
+   shared jitted ``hdb.rough_classify`` on them — the float32 progress
+   heuristic must match the batch path bit-for-bit,
+3. apply keep-bit flips to the key table (exact count ±1, fingerprint
+   XOR — XOR is its own inverse, so retraction is exact),
+4. re-run the shared jitted ``hdb.survivor_reps`` duplicate-block dedupe
+   over the over-sized key-table slice,
+5. refresh accept/survive bits for entries whose key's exact size or
+   survivorship changed; rows whose surviving-key set (or its sizes)
+   changed are *dirty* and get re-intersected through the shared jitted
+   ``hdb.intersect_keys``; their next-level state replaces the cached one
+   and the change cascades,
+6. reconcile the accepted-assignment adds/retracts into the blocks CSR
+   and candidate-pair ledger: only blocks whose membership changed are
+   re-materialized through the ``kernels/pairs`` engine (delta x old ∪
+   delta x delta), and largest-block-wins provenance is restored exactly
+   by joining affected pairs against their endpoints' unaffected accepted
+   keys.
+
+The result after any ingest sequence is bit-identical to one batch
+``hashed_dynamic_blocking`` run on the union (proven by the streaming
+property tests), except when the batch path's fixed ``rep_capacity``
+overflows — the store has no such cap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import hashing
+from ..core import hdb as hdb_mod
+from ..core import pairs as pairs_mod
+from ..core import sketches
+from .store import (INT32_MAX, BlockStore, LevelState, gather_segments,
+                    pack_key64, pack_pair, reduce_by_key, searchsorted_mask,
+                    unpack_key64, unpack_pair)
+
+logger = logging.getLogger(__name__)
+
+_SENT32 = np.uint32(0xFFFFFFFF)
+
+# the shared batch-iteration pieces, jitted once for streaming use
+_rough_classify = jax.jit(hdb_mod.rough_classify, static_argnums=0)
+_intersect_keys = jax.jit(hdb_mod.intersect_keys, static_argnums=0)
+
+
+def _pow2(n: int, floor: int = 256) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+@jax.jit
+def _shared_max_src(ka_hi, ka_lo, sa, kb_hi, kb_lo, sb):
+    """Max size over keys shared by the two padded key lists of a pair.
+
+    Sentinel lanes carry size 0, so sentinel-sentinel matches contribute
+    nothing. ``sb`` is accepted for symmetry (sizes agree on shared keys).
+    """
+    del sb
+    eq = ((ka_hi[:, :, None] == kb_hi[:, None, :])
+          & (ka_lo[:, :, None] == kb_lo[:, None, :]))
+    return jnp.max(jnp.where(eq, sa[:, :, None], 0), axis=(1, 2))
+
+
+@dataclasses.dataclass
+class LevelReport:
+    level: int
+    n_replaced: int          # rows whose cached state was swapped
+    n_reclassified: int      # entries re-run through rough_classify
+    n_changed_keys: int      # key-table rows whose count/fp/survivor changed
+    n_dirty_rows: int        # rows re-intersected
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """What one micro-batch did to the store."""
+
+    num_records: int                    # records in this delta
+    pairs_added: Tuple[np.ndarray, np.ndarray, np.ndarray]   # (a, b, src)
+    pairs_retracted: Tuple[np.ndarray, np.ndarray]           # (a, b)
+    levels: List[LevelReport]
+    seconds: float
+
+    @property
+    def num_pairs_added(self) -> int:
+        return len(self.pairs_added[0])
+
+
+@dataclasses.dataclass
+class QueryResult:
+    candidates: np.ndarray   # (C,) distinct candidate rids, sorted
+    n_blocks_hit: int        # accepted store blocks the probe matched
+    levels_walked: int
+
+
+class DeltaBlocker:
+    """Runs the incremental iteration loop against one BlockStore."""
+
+    def __init__(self, store: BlockStore):
+        self.store = store
+        self.cfg = store.cfg
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+
+    def ingest_keys(self, keys_packed, valid) -> IngestReport:
+        """Ingest a micro-batch given its top-level key matrix.
+
+        Args:
+          keys_packed: (n, K, 2) uint32 keys from ``blocks.build_keys`` on
+            the delta records (K must match previous ingests).
+          valid: (n, K) bool.
+        Record ids ``store.num_records .. +n`` are assigned in order.
+        """
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        keys = np.array(np.asarray(keys_packed), np.uint32, copy=True)
+        valid = np.asarray(valid, bool)
+        n = keys.shape[0]
+        rids = np.arange(self.store.num_records, self.store.num_records + n,
+                         dtype=np.int64)
+        self.store.num_records += n
+        keys[~valid] = _SENT32  # canonical sentinel padding, as in build_keys
+        psize = np.full(valid.shape, INT32_MAX, np.int32)
+
+        r = (rids, keys, valid, psize)
+        dead = np.zeros((0,), np.int64)
+        add_k: List[np.ndarray] = []
+        add_r: List[np.ndarray] = []
+        ret_k: List[np.ndarray] = []
+        ret_r: List[np.ndarray] = []
+        reports: List[LevelReport] = []
+        for lev in range(cfg.max_iterations):
+            if len(r[0]) == 0 and len(dead) == 0:
+                break
+            width = r[1].shape[1] if len(r[0]) else None
+            if width == 0:
+                break
+            state = (self.store.level(lev, width) if width is not None
+                     else self.store.levels[lev])
+            if state is None:
+                break
+            r, dead, la_k, la_r, lr_k, lr_r, rep = self._process_level(
+                lev, state, *r, dead)
+            add_k.append(la_k)
+            add_r.append(la_r)
+            ret_k.append(lr_k)
+            ret_r.append(lr_r)
+            reports.append(rep)
+
+        added, retracted = self._sync_pairs(
+            np.concatenate(add_k) if add_k else np.zeros((0,), np.uint64),
+            np.concatenate(add_r) if add_r else np.zeros((0,), np.int64),
+            np.concatenate(ret_k) if ret_k else np.zeros((0,), np.uint64),
+            np.concatenate(ret_r) if ret_r else np.zeros((0,), np.int64))
+        report = IngestReport(num_records=n, pairs_added=added,
+                              pairs_retracted=retracted, levels=reports,
+                              seconds=time.perf_counter() - t0)
+        logger.debug("[streaming] ingest n=%d pairs+%d pairs-%d %.3fs", n,
+                     len(added[0]), len(retracted[0]), report.seconds)
+        return report
+
+    # ------------------------------------------------------------------
+
+    def _process_level(self, lev: int, state: LevelState, r_rids, r_keys,
+                       r_valid, r_psize, dead_rids):
+        """Replace ``r_*`` rows' level state (all-invalid row == removal),
+        remove ``dead_rids`` rows, and propagate consequences level-wide.
+
+        Returns (next_repl 4-tuple, next_dead, adds_k, adds_r, rets_k,
+        rets_r, LevelReport).
+        """
+        cfg = self.cfg
+        depth = cfg.cms_depth
+        adds_k: List[np.ndarray] = []
+        adds_r: List[np.ndarray] = []
+        rets_k: List[np.ndarray] = []
+        rets_r: List[np.ndarray] = []
+        tab_dk: List[np.ndarray] = []
+        tab_dc: List[np.ndarray] = []
+        tab_df: List[np.ndarray] = []
+
+        # ---- fold replacement rows into (removals, additions) ----
+        k64_new = pack_key64(r_keys)
+        any_valid = r_valid.any(axis=1)
+        pos, exists = state.row_index(r_rids)
+        noop = np.zeros(len(r_rids), bool)
+        if np.any(exists):
+            ex = np.flatnonzero(exists)
+            rows = pos[ex]
+            same = ((state.valid[rows] == r_valid[ex]).all(axis=1)
+                    & (state.key64[rows] == k64_new[ex]).all(axis=1)
+                    & (state.psize[rows] == r_psize[ex]).all(axis=1))
+            noop[ex[same]] = True
+        keepm = ~noop & (exists | any_valid)
+        r_rids, r_keys, r_valid, r_psize, k64_new, any_valid = (
+            r_rids[keepm], r_keys[keepm], r_valid[keepm], r_psize[keepm],
+            k64_new[keepm], any_valid[keepm])
+        pos, exists = state.row_index(r_rids)
+
+        # dead rows: replacement rows going fully invalid join explicit deads
+        dpos, dfound = state.row_index(dead_rids)
+        dead_here = dead_rids[dfound]
+        next_dead = [dead_here,
+                     r_rids[exists & ~any_valid]]  # stale deeper state
+
+        changed_b = np.zeros((depth, cfg.cms.width), bool)
+
+        # ---- remove old versions (replaced + dead rows) ----
+        rm_rows = np.concatenate([pos[exists], dpos[dfound]])
+        n_replaced = len(rm_rows)
+        if len(rm_rows):
+            old_idx = state.idx[:, rm_rows]
+            old_valid = state.valid[rm_rows]
+            for j in range(depth):
+                ij = old_idx[j][old_valid]
+                np.subtract.at(state.cms[j], ij, 1)
+                changed_b[j][ij] = True
+            old_keep = state.keep[rm_rows]
+            if old_keep.any():
+                orid = np.broadcast_to(state.rids[rm_rows][:, None],
+                                       old_keep.shape)[old_keep]
+                tab_dk.append(state.key64[rm_rows][old_keep])
+                tab_dc.append(np.full(len(orid), -1, np.int64))
+                tab_df.append(hashing.np_fingerprint_rid(orid))
+            old_acc = state.accept[rm_rows]
+            if old_acc.any():
+                rets_k.append(state.key64[rm_rows][old_acc])
+                rets_r.append(np.broadcast_to(
+                    state.rids[rm_rows][:, None], old_acc.shape)[old_acc])
+            state.drop_rows(rm_rows)
+
+        # ---- add new versions (rows with at least one valid key) ----
+        nv = np.flatnonzero(any_valid)
+        if len(nv):
+            idx = sketches.np_cms_indices(cfg.cms, k64_new[nv])
+            v = r_valid[nv]
+            for j in range(depth):
+                ij = idx[j][v]
+                np.add.at(state.cms[j], ij, 1)
+                changed_b[j][ij] = True
+            state.append_rows(r_rids[nv], r_keys[nv], k64_new[nv], v,
+                              r_psize[nv], idx)
+
+        # ---- re-estimate entries hashing into a touched bucket ----
+        aff = np.zeros(state.valid.shape, bool)
+        for j in range(depth):
+            np.logical_or(aff, changed_b[j][state.idx[j]], out=aff)
+        aff &= state.valid
+        rpos, rfound = state.row_index(r_rids[nv] if len(nv) else r_rids[:0])
+        live_repl_rows = rpos[rfound]
+        if len(live_repl_rows):
+            aff[live_repl_rows] |= state.valid[live_repl_rows]
+        n_aff = int(aff.sum())
+        if n_aff:
+            a_idx = state.idx[:, aff]
+            est = state.cms[0][a_idx[0]]
+            for j in range(1, depth):
+                np.minimum(est, state.cms[j][a_idx[j]], out=est)
+            p = _pow2(n_aff)
+            est_p = np.zeros(p, np.int32)
+            est_p[:n_aff] = est
+            val_p = np.zeros(p, bool)
+            val_p[:n_aff] = True
+            psz_p = np.full(p, INT32_MAX, np.int32)
+            psz_p[:n_aff] = state.psize[aff]
+            right, keepb, _ = _rough_classify(
+                cfg, jnp.asarray(est_p), jnp.asarray(val_p),
+                jnp.asarray(psz_p))
+            right = np.asarray(right)[:n_aff]
+            keepb = np.asarray(keepb)[:n_aff]
+            old_keep = state.keep[aff]
+            erid = np.broadcast_to(
+                state.rids[:, None], state.valid.shape)[aff]
+            ekey = state.key64[aff]
+            for sel, sign in ((keepb & ~old_keep, 1), (~keepb & old_keep, -1)):
+                if sel.any():
+                    tab_dk.append(ekey[sel])
+                    tab_dc.append(np.full(int(sel.sum()), sign, np.int64))
+                    tab_df.append(hashing.np_fingerprint_rid(erid[sel]))
+            state.right[aff] = right
+            state.keep[aff] = keepb
+
+        # ---- key table update (exact counts + XOR fingerprints) ----
+        changed_keys = np.zeros((0,), np.uint64)
+        if tab_dk:
+            dk, dc, df = reduce_by_key(np.concatenate(tab_dk),
+                                       np.concatenate(tab_dc),
+                                       np.concatenate(tab_df))
+            nz = (dc != 0) | (df != 0)
+            changed_keys = dk[nz]
+            state.update_keytab(dk[nz], dc[nz], df[nz])
+
+        # ---- duplicate-block dedupe over the over-sized table slice ----
+        over = state.tab_cnt > cfg.max_block_size
+        n_over = int(over.sum())
+        new_surv = np.zeros(len(state.tab_key), bool)
+        if n_over:
+            p = _pow2(n_over, floor=64)
+            xhi = np.full(p, _SENT32, np.uint32)
+            xlo = np.full(p, _SENT32, np.uint32)
+            sz = np.full(p, INT32_MAX, np.int32)
+            khi = np.full(p, _SENT32, np.uint32)
+            klo = np.full(p, _SENT32, np.uint32)
+            fhi, flo = unpack_key64(state.tab_fp[over])
+            xhi[:n_over], xlo[:n_over] = fhi, flo
+            sz[:n_over] = state.tab_cnt[over].astype(np.int32)
+            khi[:n_over], klo[:n_over] = unpack_key64(state.tab_key[over])
+            _, _, surv = hdb_mod.survivor_reps(
+                jnp.asarray(xhi), jnp.asarray(xlo), jnp.asarray(sz),
+                jnp.asarray(khi), jnp.asarray(klo))
+            new_surv[over] = np.asarray(surv)[:n_over]
+        surv_changed = new_surv != state.tab_surv
+        state.tab_surv = new_surv
+        if surv_changed.any():
+            changed_keys = np.union1d(changed_keys,
+                                      state.tab_key[surv_changed])
+
+        # ---- refresh accept/survive where a decision input changed ----
+        refresh = aff
+        if len(changed_keys):
+            _, touched = searchsorted_mask(changed_keys,
+                                           state.key64.reshape(-1))
+            refresh = refresh | (touched.reshape(state.key64.shape)
+                                 & state.valid)
+        dirty_rows = np.zeros(state.num_rows, bool)
+        if refresh.any():
+            ekey = state.key64[refresh]
+            cnt, surv, _ = state.lookup(ekey)
+            kb = state.keep[refresh]
+            sz = np.where(kb, cnt, 0).astype(np.int32)
+            new_accept = state.right[refresh] | (
+                kb & (cnt <= cfg.max_block_size))
+            new_survive = kb & (cnt > cfg.max_block_size) & surv
+            old_accept = state.accept[refresh]
+            old_survive = state.survive[refresh]
+            old_size = state.size[refresh]
+            erid = np.broadcast_to(
+                state.rids[:, None], state.valid.shape)[refresh]
+            on = new_accept & ~old_accept
+            off = ~new_accept & old_accept
+            if on.any():
+                adds_k.append(ekey[on])
+                adds_r.append(erid[on])
+            if off.any():
+                rets_k.append(ekey[off])
+                rets_r.append(erid[off])
+            state.accept[refresh] = new_accept
+            state.survive[refresh] = new_survive
+            state.size[refresh] = sz
+            entry_dirty = ((new_survive != old_survive)
+                           | (new_survive & (sz != old_size)))
+            if entry_dirty.any():
+                dirty_rows[np.nonzero(refresh)[0][entry_dirty]] = True
+        dirty_rows[live_repl_rows] = True
+
+        # ---- re-intersect dirty rows through the shared jitted step ----
+        dirty = np.flatnonzero(dirty_rows)
+        ko = min(cfg.max_oversize_keys, state.width)
+        out_w = ko * (ko - 1) // 2
+        if len(dirty) == 0 or out_w == 0:
+            if out_w == 0:
+                next_dead.append(state.rids[dirty])
+            next_repl = (np.zeros((0,), np.int64),
+                         np.zeros((0, max(out_w, 1), 2), np.uint32),
+                         np.zeros((0, max(out_w, 1)), bool),
+                         np.zeros((0, max(out_w, 1)), np.int32))
+        else:
+            d = len(dirty)
+            p = _pow2(d, floor=64)
+
+            def pad_rows(x, fill):
+                out = np.full((p,) + x.shape[1:], fill, x.dtype)
+                out[:d] = x
+                return out
+
+            khi = pad_rows(state.keys[dirty][:, :, 0], _SENT32)
+            klo = pad_rows(state.keys[dirty][:, :, 1], _SENT32)
+            sv = pad_rows(state.survive[dirty], False)
+            sz = pad_rows(state.size[dirty], 0)
+            (nkhi, nklo), nvalid, npsize, _ = _intersect_keys(
+                cfg, (jnp.asarray(khi), jnp.asarray(klo)),
+                jnp.asarray(sv), jnp.asarray(sz))
+            nkeys = np.stack([np.asarray(nkhi)[:d], np.asarray(nklo)[:d]],
+                             axis=-1)
+            next_repl = (state.rids[dirty], nkeys,
+                         np.asarray(nvalid)[:d], np.asarray(npsize)[:d])
+
+        rep = LevelReport(level=lev, n_replaced=n_replaced,
+                          n_reclassified=n_aff,
+                          n_changed_keys=len(changed_keys),
+                          n_dirty_rows=len(dirty))
+
+        def cat(parts, dtype):
+            return (np.concatenate(parts) if parts
+                    else np.zeros((0,), dtype))
+
+        return (next_repl, np.concatenate(next_dead),
+                cat(adds_k, np.uint64), cat(adds_r, np.int64),
+                cat(rets_k, np.uint64), cat(rets_r, np.int64), rep)
+
+    # ------------------------------------------------------------------
+    # pair reconciliation
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _cancel_common(add_k, add_r, ret_k, ret_r):
+        """Drop (key, rid) assignments present in both lists (a replaced
+        row re-accepting the same key is a net no-op)."""
+        if len(add_k) == 0 or len(ret_k) == 0:
+            return add_k, add_r, ret_k, ret_r
+        allk = np.concatenate([add_k, ret_k])
+        allr = np.concatenate([add_r, ret_r])
+        src = np.concatenate([np.zeros(len(add_k), np.int8),
+                              np.ones(len(ret_k), np.int8)])
+        order = np.lexsort((src, allr, allk))
+        allk, allr, src = allk[order], allr[order], src[order]
+        match = np.zeros(len(allk), bool)
+        nxt = ((allk[1:] == allk[:-1]) & (allr[1:] == allr[:-1])
+               & (src[1:] != src[:-1]))
+        match[:-1] |= nxt
+        match[1:] |= nxt
+        keep = ~match
+        is_add = src == 0
+        return (allk[keep & is_add], allr[keep & is_add],
+                allk[keep & ~is_add], allr[keep & ~is_add])
+
+    @staticmethod
+    def _nontrivial(blk: pairs_mod.Blocks) -> pairs_mod.Blocks:
+        """Restrict a CSR slice to blocks that can produce pairs."""
+        keep = blk.size >= 2
+        members = gather_segments(blk.start[keep], blk.size[keep],
+                                  blk.members)
+        return pairs_mod.Blocks(
+            blk.key_hi[keep], blk.key_lo[keep],
+            np.concatenate([[0], np.cumsum(blk.size[keep])])[:-1]
+            .astype(np.int64),
+            blk.size[keep], members)
+
+    def _sync_pairs(self, add_k, add_r, ret_k, ret_r):
+        """Apply assignment deltas; return ((a, b, src) added, (a, b)
+        retracted) ledger changes, keeping the ledger equal to an exact
+        batch ``dedupe_pairs`` of the current accepted blocks.
+
+        A pair's ledger entry can only need *downward* revision (smaller
+        src, or retraction) if it had a source among the *shrink* keys —
+        keys that lost a member this ingest. Every other affected pair's
+        sources monotonically grew, so ``max(current, new affected src)``
+        is exact without re-deriving its unaffected coverage. The
+        expensive join therefore runs only over the shrink keys' old
+        pairs; pure-growth ingests never pay it.
+        """
+        empty = ((np.zeros((0,), np.int64),) * 3,
+                 (np.zeros((0,), np.int64),) * 2)
+        add_k, add_r, ret_k, ret_r = self._cancel_common(
+            add_k, add_r, ret_k, ret_r)
+        if len(add_k) == 0 and len(ret_k) == 0:
+            return empty
+        shrink = np.unique(ret_k)
+        affected, shrink_old_csr, new_csr = self.store.apply_assignment_deltas(
+            add_k, add_r, ret_k, ret_r, snapshot_keys=shrink)
+
+        def pair_set(csr):
+            blk = self._nontrivial(csr)
+            if blk.num_blocks == 0:
+                return (np.zeros((0,), np.uint64), np.zeros((0,), np.int64))
+            total = blk.num_pair_slots
+            ps = pairs_mod.dedupe_pairs(blk, budget=total + 1, backend="auto")
+            return pack_pair(ps.a, ps.b), ps.src_size
+
+        join_pack, _ = pair_set(shrink_old_csr)   # may have LOST a source
+        new_pack, new_src = pair_set(new_csr)     # all affected, post-splice
+        # growth branch: sources only grew -> max with the current entry
+        _, in_join = searchsorted_mask(join_pack, new_pack)
+        grow_pack = new_pack[~in_join]
+        grow_aff = new_src[~in_join]
+        lpos, lfound = searchsorted_mask(self.store.led_pack, grow_pack)
+        cur = np.zeros(len(grow_pack), np.int64)
+        if len(self.store.led_pack):
+            cur[lfound] = self.store.led_src[
+                np.minimum(lpos, len(self.store.led_pack) - 1)][lfound]
+        grow_src = np.maximum(cur, grow_aff)
+        touch = ~lfound | (grow_src != cur)       # skip no-op upserts
+        # join branch: full recompute (affected part + unaffected coverage)
+        if len(join_pack):
+            aff_src = np.zeros(len(join_pack), np.int64)
+            if len(new_pack):
+                jpos, jhit = searchsorted_mask(new_pack, join_pack)
+                aff_src[jhit] = new_src[np.minimum(
+                    jpos, len(new_pack) - 1)][jhit]
+            unaff = self._unaffected_src(join_pack, affected)
+            join_src = np.maximum(aff_src, unaff)
+        else:
+            join_src = np.zeros((0,), np.int64)
+        pairs_all = np.concatenate([grow_pack[touch], join_pack])
+        src_all = np.concatenate([grow_src[touch], join_src])
+        if len(pairs_all) == 0:
+            return empty
+        added_pack, added_src, retr_pack = self.store.apply_pair_deltas(
+            pairs_all, src_all)
+        aa, ab = unpack_pair(added_pack)
+        ra, rb = unpack_pair(retr_pack)
+        return (aa, ab, added_src), (ra, rb)
+
+    def _unaffected_src(self, pair_pack: np.ndarray,
+                        affected: np.ndarray) -> np.ndarray:
+        """Per pair: largest accepted block containing both endpoints whose
+        key is NOT in ``affected`` (0 if none). Exact join through the
+        cached per-level accept bits."""
+        store = self.store
+        a, b = unpack_pair(pair_pack)
+        recs = np.unique(np.concatenate([a, b]))
+        ks: List[np.ndarray] = []
+        rs: List[np.ndarray] = []
+        for state in store.levels:
+            if state is None or state.num_rows == 0:
+                continue
+            rpos, rfound = state.row_index(recs)
+            rows = rpos[rfound]
+            if len(rows) == 0:
+                continue
+            acc = state.accept[rows]
+            if not acc.any():
+                continue
+            ks.append(state.key64[rows][acc])
+            rs.append(np.broadcast_to(
+                state.rids[rows][:, None], acc.shape)[acc])
+        if not ks:
+            return np.zeros(len(pair_pack), np.int64)
+        key = np.concatenate(ks)
+        rid = np.concatenate(rs)
+        _, isaff = searchsorted_mask(affected, key)
+        key, rid = key[~isaff], rid[~isaff]
+        if len(key) == 0:
+            return np.zeros(len(pair_pack), np.int64)
+        bpos, bfound = searchsorted_mask(store.bk_key, key)
+        size = np.where(bfound, store.bk_size[np.minimum(
+            bpos, len(store.bk_key) - 1)], 0)
+        # dense padded (record -> key list) matrix
+        uidx = np.searchsorted(recs, rid)
+        counts = np.bincount(uidx, minlength=len(recs))
+        kmax = _pow2(int(counts.max()), floor=4)
+        order = np.argsort(uidx, kind="stable")
+        u_s, k_s, s_s = uidx[order], key[order], size[order]
+        starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+        col = np.arange(len(u_s)) - starts[u_s]
+        kmat = np.full((len(recs), kmax), np.uint64(0xFFFFFFFFFFFFFFFF))
+        smat = np.zeros((len(recs), kmax), np.int32)
+        kmat[u_s, col] = k_s
+        smat[u_s, col] = s_s
+        khi, klo = unpack_key64(kmat)
+        ra = np.searchsorted(recs, a)
+        rb = np.searchsorted(recs, b)
+        n_p = len(pair_pack)
+        chunk = 8192
+        pad = (-n_p) % chunk
+        if pad:  # fixed chunk shape -> one compiled kernel per kmax
+            ra = np.concatenate([ra, np.zeros(pad, ra.dtype)])
+            rb = np.concatenate([rb, np.zeros(pad, rb.dtype)])
+        out = np.zeros(n_p + pad, np.int64)
+        for off in range(0, n_p + pad, chunk):
+            sl = slice(off, off + chunk)
+            got = _shared_max_src(
+                jnp.asarray(khi[ra[sl]]), jnp.asarray(klo[ra[sl]]),
+                jnp.asarray(smat[ra[sl]]),
+                jnp.asarray(khi[rb[sl]]), jnp.asarray(klo[rb[sl]]),
+                jnp.asarray(smat[rb[sl]]))
+            out[sl] = np.asarray(got).astype(np.int64)
+        return out[:n_p]
+
+    # ------------------------------------------------------------------
+    # query
+    # ------------------------------------------------------------------
+
+    def query_keys(self, keys_packed, valid) -> List[QueryResult]:
+        """Candidate ids per probe record (serving-style, read-only).
+
+        Walks the store's levels with the probe's key matrix: accepted
+        probe keys contribute the matching stored block's members; keys
+        landing on surviving over-sized blocks are pairwise-intersected
+        (same jitted ``intersect_keys``) and the walk descends. The
+        probe's own (absent) contribution to counts is NOT simulated —
+        a query never mutates the store.
+        """
+        cfg = self.cfg
+        keys = np.array(np.asarray(keys_packed), np.uint32, copy=True)
+        valid = np.asarray(valid, bool)
+        q = keys.shape[0]
+        keys[~valid] = _SENT32
+        psize = np.full(valid.shape, INT32_MAX, np.int32)
+        cand_probe: List[np.ndarray] = []
+        cand_rid: List[np.ndarray] = []
+        hits = np.zeros(q, np.int64)
+        levels_walked = 0
+        for lev in range(cfg.max_iterations):
+            state = self.store.levels[lev]
+            if state is None or state.num_rows == 0 or keys.shape[1] == 0:
+                break
+            if not valid.any():
+                break
+            levels_walked += 1
+            k64 = pack_key64(keys)
+            idx = sketches.np_cms_indices(cfg.cms, k64)
+            est = state.cms[0][idx[0]]
+            for j in range(1, cfg.cms_depth):
+                np.minimum(est, state.cms[j][idx[j]], out=est)
+            p = _pow2(q * keys.shape[1], floor=64)
+            est_p = np.zeros(p, np.int32)
+            val_p = np.zeros(p, bool)
+            psz_p = np.full(p, INT32_MAX, np.int32)
+            m = q * keys.shape[1]
+            est_p[:m] = est.reshape(-1)
+            val_p[:m] = valid.reshape(-1)
+            psz_p[:m] = psize.reshape(-1)
+            right, keepb, _ = _rough_classify(
+                cfg, jnp.asarray(est_p), jnp.asarray(val_p),
+                jnp.asarray(psz_p))
+            right = np.asarray(right)[:m].reshape(valid.shape)
+            keepb = np.asarray(keepb)[:m].reshape(valid.shape)
+            cnt, surv, _ = state.lookup(k64)
+            accept = right | (keepb & (cnt <= cfg.max_block_size))
+            survive = keepb & (cnt > cfg.max_block_size) & surv
+            size = np.where(keepb, cnt, 0).astype(np.int32)
+            # collect members of matching accepted blocks
+            hit_keys = k64[accept]
+            if len(hit_keys):
+                probe_of = np.broadcast_to(
+                    np.arange(q)[:, None], accept.shape)[accept]
+                members = self.store.members_of(hit_keys)
+                for pi, mem in zip(probe_of, members):
+                    if len(mem):
+                        hits[pi] += 1
+                        cand_probe.append(np.full(len(mem), pi))
+                        cand_rid.append(mem)
+            if not survive.any():
+                break
+            ko = min(cfg.max_oversize_keys, keys.shape[1])
+            if ko < 2:
+                break
+            p = _pow2(q, floor=64)
+
+            def pad_rows(x, fill):
+                out = np.full((p,) + x.shape[1:], fill, x.dtype)
+                out[:q] = x
+                return out
+
+            (nkhi, nklo), nvalid, npsize, _ = _intersect_keys(
+                cfg, (jnp.asarray(pad_rows(keys[:, :, 0], _SENT32)),
+                      jnp.asarray(pad_rows(keys[:, :, 1], _SENT32))),
+                jnp.asarray(pad_rows(survive, False)),
+                jnp.asarray(pad_rows(size, 0)))
+            keys = np.stack([np.asarray(nkhi)[:q], np.asarray(nklo)[:q]],
+                            axis=-1)
+            valid = np.asarray(nvalid)[:q]
+            psize = np.asarray(npsize)[:q]
+        if cand_probe:
+            cp = np.concatenate(cand_probe)
+            cr = np.concatenate(cand_rid)
+        else:
+            cp = np.zeros((0,), np.int64)
+            cr = np.zeros((0,), np.int64)
+        out = []
+        for pi in range(q):
+            out.append(QueryResult(
+                candidates=np.unique(cr[cp == pi]),
+                n_blocks_hit=int(hits[pi]),
+                levels_walked=levels_walked))
+        return out

@@ -1,0 +1,238 @@
+"""Slot-scheduled front-end for the streaming blocker.
+
+Modeled on ``serving/engine.py``'s continuous-batching loop: submissions
+(ingest record batches, query probes) queue host-side; each ``step()``
+drains at most one fixed-size ingest micro-batch and one fixed-size query
+batch, padding to the slot count so every step reuses the same compiled
+classify/intersect family — the scheduler only flips host metadata, the
+device never sees a new shape. Optionally scores each ingest's new
+candidate pairs with the pairwise matcher, feeding it the pair buffers
+directly (no host round trip of the pair arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import blocks as blocks_mod
+from ..core import hdb as hdb_mod
+from .delta import DeltaBlocker, IngestReport, QueryResult
+from .store import BlockStore
+
+
+@dataclasses.dataclass
+class RecordBatch:
+    """A micro-batch of records in the corpus column format.
+
+    ``columns`` maps column name -> (tokens (n, T) uint32, mask (n, T)
+    bool); widths and the blocking spec must match the engine's schema
+    across batches (the top-level key width is part of the store state).
+    """
+
+    columns: Dict[str, tuple]
+    num_records: int
+
+    @staticmethod
+    def from_corpus(corpus, idx: np.ndarray) -> "RecordBatch":
+        idx = np.asarray(idx)
+        cols = {name: (np.asarray(col.tokens)[idx], np.asarray(col.mask)[idx])
+                for name, col in corpus.columns.items()}
+        return RecordBatch(columns=cols, num_records=len(idx))
+
+
+class ColumnCache:
+    """Device-resident token columns with amortized-growth appends.
+
+    The matcher needs every ingested record's columns on device to score
+    new candidate pairs. Re-concatenating and re-uploading the whole
+    history per delta would be O(N) data movement per ingest — the exact
+    waste the streaming subsystem exists to avoid. Instead the cache
+    keeps power-of-two-capacity padded device buffers: within capacity an
+    append uploads ONLY the delta rows (`lax.dynamic_update_slice`, delta
+    padded to a power-of-two row bucket so the compile cache stays
+    bounded); on overflow the capacity doubles and the buffer is rebuilt
+    once — amortized O(N) total. Padding rows carry ``mask=False`` and
+    are never indexed by a real pair, so scores are unchanged. Buffer
+    shapes only change on doubling, so the matcher kernel recompiles
+    O(log N) times over a service's lifetime.
+    """
+
+    def __init__(self):
+        self.num_records = 0
+        self._cap = 0
+        self._host_t: Dict[str, np.ndarray] = {}
+        self._host_m: Dict[str, np.ndarray] = {}
+        self._dev: Dict[str, blocks_mod.TokenColumn] = {}
+
+    def append(self, columns: Dict[str, tuple]) -> None:
+        import jax
+        import jax.numpy as jnp
+        n = next(iter(columns.values()))[0].shape[0]
+        new_len = self.num_records + n
+        if new_len > self._cap:
+            cap = 1024
+            while cap < new_len:
+                cap *= 2
+            for name, (t, m) in columns.items():
+                ht = np.zeros((cap, t.shape[1]), t.dtype)
+                hm = np.zeros((cap, m.shape[1]), bool)
+                if name in self._host_t:
+                    ht[:self.num_records] = self._host_t[name][:self.num_records]
+                    hm[:self.num_records] = self._host_m[name][:self.num_records]
+                ht[self.num_records:new_len] = t
+                hm[self.num_records:new_len] = m
+                self._host_t[name], self._host_m[name] = ht, hm
+                self._dev[name] = blocks_mod.TokenColumn(
+                    jnp.asarray(ht), jnp.asarray(hm))  # one rebuild upload
+            self._cap = cap
+        else:
+            bucket = 64
+            while bucket < n:
+                bucket *= 2
+            bucket = min(bucket, self._cap - self.num_records)
+            start = jnp.int32(self.num_records)
+            for name, (t, m) in columns.items():
+                self._host_t[name][self.num_records:new_len] = t
+                self._host_m[name][self.num_records:new_len] = m
+                # delta-only upload; rows [n, bucket) re-write zero padding
+                pt = np.zeros((bucket, t.shape[1]), t.dtype)
+                pm = np.zeros((bucket, m.shape[1]), bool)
+                pt[:n], pm[:n] = t, m
+                col = self._dev[name]
+                self._dev[name] = blocks_mod.TokenColumn(
+                    jax.lax.dynamic_update_slice(
+                        col.tokens, jnp.asarray(pt), (start, jnp.int32(0))),
+                    jax.lax.dynamic_update_slice(
+                        col.mask, jnp.asarray(pm), (start, jnp.int32(0))))
+        self.num_records = new_len
+
+    def columns(self) -> Dict[str, blocks_mod.TokenColumn]:
+        return dict(self._dev)
+
+
+@dataclasses.dataclass
+class IngestResult:
+    uids: List[int]     # every submission coalesced into this micro-batch
+    first_rid: int
+    report: IngestReport
+    match_scores: Optional[np.ndarray] = None   # scores of pairs_added
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    uid: int
+    result: QueryResult
+
+
+class StreamingEngine:
+    """Micro-batch ingest + probe queries over one BlockStore."""
+
+    def __init__(self, blocking: Dict[str, blocks_mod.ColumnBlocking],
+                 cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(),
+                 ingest_slots: int = 256, query_slots: int = 64,
+                 matcher_cfg=None):
+        self.blocking = blocking
+        self.store = BlockStore(cfg)
+        self.blocker = DeltaBlocker(self.store)
+        self.ingest_slots = ingest_slots
+        self.query_slots = query_slots
+        self.matcher_cfg = matcher_cfg
+        self._uid = 0
+        self._ingest_queue: List[tuple] = []   # (uid, RecordBatch)
+        self._query_queue: List[tuple] = []    # (uid, RecordBatch)
+        self.ingest_results: List[IngestResult] = []
+        self.probe_results: List[ProbeResult] = []
+        # retained columns for matcher scoring of new pairs
+        self.column_cache = ColumnCache()
+
+    # ------------------------------------------------------------------
+
+    def submit_ingest(self, batch: RecordBatch) -> int:
+        self._uid += 1
+        self._ingest_queue.append((self._uid, batch))
+        return self._uid
+
+    def submit_query(self, batch: RecordBatch) -> int:
+        self._uid += 1
+        self._query_queue.append((self._uid, batch))
+        return self._uid
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._ingest_queue) or bool(self._query_queue)
+
+    # ------------------------------------------------------------------
+
+    def _build_keys(self, batch: RecordBatch):
+        import jax.numpy as jnp
+        cols = {name: blocks_mod.TokenColumn(jnp.asarray(t), jnp.asarray(m))
+                for name, (t, m) in batch.columns.items()}
+        keys, valid = blocks_mod.build_keys(cols, self.blocking)
+        return np.asarray(keys), np.asarray(valid)
+
+    def _pad_batch(self, batches: List[tuple], slots: int) -> List[tuple]:
+        """Coalesce queued (uid, batch) entries up to one slot budget."""
+        take: List[tuple] = []
+        total = 0
+        while batches and total + batches[0][1].num_records <= slots:
+            total += batches[0][1].num_records
+            take.append(batches.pop(0))
+        if not take and batches:   # oversized single batch: pass through
+            take.append(batches.pop(0))
+        return take
+
+    def step(self) -> None:
+        """Process one ingest micro-batch and one query batch, if queued."""
+        ingest = self._pad_batch(self._ingest_queue, self.ingest_slots)
+        if ingest:
+            uids = [u for u, _ in ingest]
+            merged = {name: (np.concatenate([b.columns[name][0] for _, b in ingest]),
+                             np.concatenate([b.columns[name][1] for _, b in ingest]))
+                      for name in ingest[0][1].columns}
+            batch = RecordBatch(merged, sum(b.num_records for _, b in ingest))
+            if self.matcher_cfg is not None:
+                self.column_cache.append(merged)
+            first_rid = self.store.num_records
+            keys, valid = self._build_keys(batch)
+            report = self.blocker.ingest_keys(keys, valid)
+            scores = None
+            if self.matcher_cfg is not None and report.num_pairs_added:
+                scores = self._score_new_pairs(report)
+            self.ingest_results.append(IngestResult(
+                uids=uids, first_rid=first_rid, report=report,
+                match_scores=scores))
+        queries = self._pad_batch(self._query_queue, self.query_slots)
+        if queries:
+            merged = {name: (np.concatenate([b.columns[name][0] for _, b in queries]),
+                             np.concatenate([b.columns[name][1] for _, b in queries]))
+                      for name in queries[0][1].columns}
+            batch = RecordBatch(merged, sum(b.num_records for _, b in queries))
+            keys, valid = self._build_keys(batch)
+            results = self.blocker.query_keys(keys, valid)
+            off = 0
+            for uid, qb in queries:
+                for r in results[off:off + qb.num_records]:
+                    self.probe_results.append(ProbeResult(uid=uid, result=r))
+                off += qb.num_records
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.ingest_results, self.probe_results
+
+    # ------------------------------------------------------------------
+
+    def _score_new_pairs(self, report: IngestReport) -> np.ndarray:
+        """Matcher scores for this ingest's new candidate pairs, fed the
+        pair buffers directly (device arrays stay device-side)."""
+        import jax.numpy as jnp
+        from ..data import matcher
+        a, b, _ = report.pairs_added
+        return matcher.score_pairs(self.column_cache.columns(),
+                                   jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(b, jnp.int32),
+                                   self.matcher_cfg)

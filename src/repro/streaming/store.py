@@ -1,0 +1,459 @@
+"""BlockStore: the persistent device-shaped blocking state between calls.
+
+One store holds, for every HDB iteration level ``i``:
+
+- the per-record iteration state exactly as the batch driver would hold it
+  at iteration ``i`` on the union of everything ingested so far: dense
+  ``(R_i, W_i)`` key/valid/psize arrays restricted to live rows, plus the
+  cached decision bits (right/keep/accept/survive) and per-entry exact
+  sizes from the last ingest,
+- the level's Count-Min Sketch over its live (record, key) entries, kept
+  current by *linear fold-in/fold-out* (``sketches.cms_fold`` /
+  ``cms_subtract``) — plus the cached bucket indices per entry so a delta
+  touches only the buckets it hashes to,
+- a key table (sorted u64 keys -> exact keep-entry count, XOR membership
+  fingerprint, survivor flag) — the incremental mirror of Algorithm 4's
+  sort-based exact counting,
+
+and globally:
+
+- the accepted-blocks CSR (sorted block keys -> member rid runs), i.e.
+  ``pairs.build_blocks`` of the union's accepted assignments, maintained
+  by splicing only blocks whose membership changed,
+- the candidate-pair ledger (packed ``a << 32 | b`` u64 keys -> size of
+  the largest source block), i.e. ``pairs.dedupe_pairs`` of the CSR,
+  maintained from per-ingest pair deltas.
+
+All arrays are host numpy; the delta blocker stages fixed-shape slices
+through the same jitted functions the batch path uses. See
+``streaming/__init__`` for the memory-layout overview and `delta.py` for
+the update algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import hdb as hdb_mod
+from ..core import pairs as pairs_mod
+from ..core import sketches
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def pack_key64(keys: np.ndarray) -> np.ndarray:
+    """(..., 2) uint32 storage keys -> uint64."""
+    k = np.asarray(keys, np.uint32)
+    return (k[..., 0].astype(np.uint64) << np.uint64(32)) | k[..., 1]
+
+
+def unpack_key64(key64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    key64 = np.asarray(key64, np.uint64)
+    return ((key64 >> np.uint64(32)).astype(np.uint32),
+            (key64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def pack_pair(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Canonical (a < b) rid pair -> sortable uint64."""
+    return (np.asarray(a, np.uint64) << np.uint64(32)) | np.asarray(b, np.uint64)
+
+
+def unpack_pair(p: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    p = np.asarray(p, np.uint64)
+    return ((p >> np.uint64(32)).astype(np.int64),
+            (p & np.uint64(0xFFFFFFFF)).astype(np.int64))
+
+
+def gather_segments(starts: np.ndarray, sizes: np.ndarray,
+                    pool: np.ndarray) -> np.ndarray:
+    """Concatenate ``pool[start : start + size]`` runs (vectorized)."""
+    total = int(sizes.sum())
+    offs = (np.arange(total, dtype=np.int64)
+            - np.repeat(np.cumsum(sizes) - sizes, sizes))
+    return pool[np.repeat(starts, sizes) + offs]
+
+
+def blocks_from_segments(key64: np.ndarray, sizes: np.ndarray,
+                         members: np.ndarray) -> pairs_mod.Blocks:
+    """Compact (key, size, concatenated members) runs into a Blocks CSR."""
+    hi, lo = unpack_key64(key64)
+    start = np.concatenate([[0], np.cumsum(sizes)])[:-1].astype(np.int64)
+    return pairs_mod.Blocks(hi, lo, start, sizes.astype(np.int64),
+                            members.astype(np.int64))
+
+
+def searchsorted_mask(sorted_arr: np.ndarray, queries: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """(positions, found_mask) of ``queries`` in a sorted array."""
+    pos = np.searchsorted(sorted_arr, queries)
+    safe = np.minimum(pos, max(len(sorted_arr) - 1, 0))
+    found = ((pos < len(sorted_arr)) & (sorted_arr[safe] == queries)
+             if len(sorted_arr) else np.zeros(len(queries), bool))
+    return pos, found
+
+
+def set_subtract_pairs(cand_k: np.ndarray, cand_r: np.ndarray,
+                       ret_k: np.ndarray, ret_r: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Sorted set difference on (key64, rid) pairs.
+
+    ``cand`` holds distinct pairs; every ``ret`` pair occurs in ``cand``.
+    Returns the surviving pairs sorted by (key, rid). Vectorized via one
+    stable lexsort with a source flag: each retract lands immediately
+    after its matching candidate and deletes it.
+    """
+    if len(ret_k) == 0:
+        order = np.lexsort((cand_r, cand_k))
+        return cand_k[order], cand_r[order]
+    allk = np.concatenate([cand_k, ret_k])
+    allr = np.concatenate([cand_r, ret_r])
+    src = np.concatenate([np.zeros(len(cand_k), np.int8),
+                          np.ones(len(ret_k), np.int8)])
+    order = np.lexsort((src, allr, allk))
+    allk, allr, src = allk[order], allr[order], src[order]
+    dead = np.zeros(len(allk), bool)
+    ret_pos = np.flatnonzero(src == 1)
+    dead[ret_pos - 1] = True  # the matching candidate right before each ret
+    keep = (src == 0) & ~dead
+    return allk[keep], allr[keep]
+
+
+def reduce_by_key(keys: np.ndarray, cnt: np.ndarray, fp: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Aggregate (count sum, fingerprint XOR) per distinct key."""
+    order = np.argsort(keys, kind="stable")
+    keys, cnt, fp = keys[order], cnt[order], fp[order]
+    starts = np.flatnonzero(np.concatenate([[True], keys[1:] != keys[:-1]]))
+    uk = keys[starts]
+    ucnt = np.add.reduceat(cnt, starts)
+    ufp = np.bitwise_xor.reduceat(fp, starts)
+    return uk, ucnt, ufp
+
+
+@dataclasses.dataclass
+class LevelState:
+    """Cached union state at one HDB iteration level (see module doc)."""
+
+    width: int
+    rids: np.ndarray      # (R,) int64, sorted
+    keys: np.ndarray      # (R, W, 2) uint32, sentinel where ~valid
+    key64: np.ndarray     # (R, W) uint64 packed mirror of keys
+    valid: np.ndarray     # (R, W) bool
+    psize: np.ndarray     # (R, W) int32
+    idx: np.ndarray       # (depth, R, W) int32 CMS bucket indices
+    right: np.ndarray     # (R, W) bool  CMS says right-sized
+    keep: np.ndarray      # (R, W) bool  survives rough detection
+    accept: np.ndarray    # (R, W) bool  accepted assignment
+    survive: np.ndarray   # (R, W) bool  on a surviving over-sized block
+    size: np.ndarray      # (R, W) int32 exact keep-count (0 where ~keep)
+    cms: np.ndarray       # (depth, width) int32
+    tab_key: np.ndarray   # (K,) uint64, sorted
+    tab_cnt: np.ndarray   # (K,) int64
+    tab_fp: np.ndarray    # (K,) uint64
+    tab_surv: np.ndarray  # (K,) bool
+
+    @property
+    def num_rows(self) -> int:
+        return len(self.rids)
+
+    @property
+    def num_entries(self) -> int:
+        return int(self.valid.sum())
+
+    @staticmethod
+    def empty(width: int, cms_cfg: sketches.CMSConfig) -> "LevelState":
+        depth = cms_cfg.depth
+        return LevelState(
+            width=width,
+            rids=np.zeros((0,), np.int64),
+            keys=np.zeros((0, width, 2), np.uint32),
+            key64=np.zeros((0, width), np.uint64),
+            valid=np.zeros((0, width), bool),
+            psize=np.zeros((0, width), np.int32),
+            idx=np.zeros((depth, 0, width), np.int32),
+            right=np.zeros((0, width), bool),
+            keep=np.zeros((0, width), bool),
+            accept=np.zeros((0, width), bool),
+            survive=np.zeros((0, width), bool),
+            size=np.zeros((0, width), np.int32),
+            cms=np.zeros((depth, cms_cfg.width), np.int32),
+            tab_key=np.zeros((0,), np.uint64),
+            tab_cnt=np.zeros((0,), np.int64),
+            tab_fp=np.zeros((0,), np.uint64),
+            tab_surv=np.zeros((0,), bool),
+        )
+
+    def row_index(self, rids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(row positions, found mask) for record ids."""
+        return searchsorted_mask(self.rids, np.asarray(rids, np.int64))
+
+    def drop_rows(self, rows: np.ndarray) -> None:
+        keep = np.ones(len(self.rids), bool)
+        keep[rows] = False
+        self.rids = self.rids[keep]
+        self.keys = self.keys[keep]
+        self.key64 = self.key64[keep]
+        self.valid = self.valid[keep]
+        self.psize = self.psize[keep]
+        self.idx = self.idx[:, keep]
+        self.right = self.right[keep]
+        self.keep = self.keep[keep]
+        self.accept = self.accept[keep]
+        self.survive = self.survive[keep]
+        self.size = self.size[keep]
+
+    def append_rows(self, rids, keys, key64, valid, psize, idx) -> None:
+        n = len(rids)
+        w = self.width
+        self.rids = np.concatenate([self.rids, np.asarray(rids, np.int64)])
+        self.keys = np.concatenate([self.keys, keys])
+        self.key64 = np.concatenate([self.key64, key64])
+        self.valid = np.concatenate([self.valid, valid])
+        self.psize = np.concatenate([self.psize, psize])
+        self.idx = np.concatenate([self.idx, idx], axis=1)
+        zb = np.zeros((n, w), bool)
+        zi = np.zeros((n, w), np.int32)
+        self.right = np.concatenate([self.right, zb])
+        self.keep = np.concatenate([self.keep, zb.copy()])
+        self.accept = np.concatenate([self.accept, zb.copy()])
+        self.survive = np.concatenate([self.survive, zb.copy()])
+        self.size = np.concatenate([self.size, zi])
+        order = np.argsort(self.rids, kind="stable")
+        if not np.array_equal(order, np.arange(len(order))):
+            self.rids = self.rids[order]
+            self.keys = self.keys[order]
+            self.key64 = self.key64[order]
+            self.valid = self.valid[order]
+            self.psize = self.psize[order]
+            self.idx = self.idx[:, order]
+            self.right = self.right[order]
+            self.keep = self.keep[order]
+            self.accept = self.accept[order]
+            self.survive = self.survive[order]
+            self.size = self.size[order]
+
+    def update_keytab(self, d_key: np.ndarray, d_cnt: np.ndarray,
+                      d_fp: np.ndarray) -> np.ndarray:
+        """Apply aggregated (count, fingerprint) deltas; returns the keys
+        whose table row changed (including inserts and deletions)."""
+        if len(d_key) == 0:
+            return d_key
+        pos, found = searchsorted_mask(self.tab_key, d_key)
+        # in-place update of existing rows
+        upd = np.flatnonzero(found)
+        if len(upd):
+            rows = pos[upd]
+            self.tab_cnt[rows] += d_cnt[upd]
+            self.tab_fp[rows] ^= d_fp[upd]
+        # insert new rows
+        new = np.flatnonzero(~found)
+        if len(new):
+            at = pos[new]
+            self.tab_key = np.insert(self.tab_key, at, d_key[new])
+            self.tab_cnt = np.insert(self.tab_cnt, at, d_cnt[new])
+            self.tab_fp = np.insert(self.tab_fp, at, d_fp[new])
+            self.tab_surv = np.insert(self.tab_surv, at, False)
+        # drop zero-count rows (all their entries un-kept)
+        dead = self.tab_cnt == 0
+        if dead.any():
+            self.tab_key = self.tab_key[~dead]
+            self.tab_cnt = self.tab_cnt[~dead]
+            self.tab_fp = self.tab_fp[~dead]
+            self.tab_surv = self.tab_surv[~dead]
+        return d_key
+
+    def lookup(self, key64: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(count, survivor flag, found) per query key (count 0 if absent)."""
+        if len(self.tab_key) == 0:
+            return (np.zeros(key64.shape, np.int64),
+                    np.zeros(key64.shape, bool),
+                    np.zeros(key64.shape, bool))
+        pos, found = searchsorted_mask(self.tab_key, key64.reshape(-1))
+        safe = np.minimum(pos, len(self.tab_key) - 1)
+        cnt = np.where(found, self.tab_cnt[safe], 0)
+        surv = np.where(found, self.tab_surv[safe], False)
+        return (cnt.reshape(key64.shape).astype(np.int64),
+                surv.reshape(key64.shape),
+                found.reshape(key64.shape))
+
+
+class BlockStore:
+    """Persistent blocking state for streaming ingest + candidate queries."""
+
+    def __init__(self, cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig()):
+        self.cfg = cfg
+        self.num_records = 0
+        self.levels: List[Optional[LevelState]] = [None] * cfg.max_iterations
+        # accepted blocks CSR (== pairs.build_blocks(min_size=1) of the union)
+        self.bk_key = np.zeros((0,), np.uint64)
+        self.bk_start = np.zeros((0,), np.int64)
+        self.bk_size = np.zeros((0,), np.int64)
+        self.bk_members = np.zeros((0,), np.int64)
+        # candidate-pair ledger (== pairs.dedupe_pairs of the CSR, exact)
+        self.led_pack = np.zeros((0,), np.uint64)
+        self.led_src = np.zeros((0,), np.int64)
+
+    # ------------------------------------------------------------------
+    # level access
+    # ------------------------------------------------------------------
+
+    def level(self, i: int, width: Optional[int] = None) -> LevelState:
+        st = self.levels[i]
+        if st is None:
+            assert width is not None, f"level {i} accessed before first ingest"
+            st = LevelState.empty(width, self.cfg.cms)
+            self.levels[i] = st
+        elif width is not None and st.width != width:
+            raise ValueError(
+                f"level {i} width mismatch: store has {st.width}, delta has "
+                f"{width} (top-level key schema must be stable)")
+        return st
+
+    # ------------------------------------------------------------------
+    # accepted-blocks CSR
+    # ------------------------------------------------------------------
+
+    def members_of(self, key64: np.ndarray) -> List[np.ndarray]:
+        """Member rid arrays per query block key (empty when absent)."""
+        out = []
+        pos, found = searchsorted_mask(self.bk_key, np.asarray(key64, np.uint64))
+        for p, f in zip(pos, found):
+            if f:
+                s = self.bk_start[p]
+                out.append(self.bk_members[s:s + self.bk_size[p]])
+            else:
+                out.append(np.zeros((0,), np.int64))
+        return out
+
+    def affected_slice(self, keys: np.ndarray) -> pairs_mod.Blocks:
+        """CSR restricted to ``keys`` (sorted unique), for the pair engine."""
+        pos, found = searchsorted_mask(self.bk_key, keys)
+        pos = pos[found]
+        members = gather_segments(self.bk_start[pos], self.bk_size[pos],
+                                  self.bk_members)
+        return blocks_from_segments(self.bk_key[pos], self.bk_size[pos],
+                                    members)
+
+    def apply_assignment_deltas(self, add_k: np.ndarray, add_r: np.ndarray,
+                                ret_k: np.ndarray, ret_r: np.ndarray,
+                                snapshot_keys: Optional[np.ndarray] = None
+                                ) -> Tuple[np.ndarray, pairs_mod.Blocks,
+                                           pairs_mod.Blocks]:
+        """Splice accepted-assignment adds/retracts into the blocks CSR.
+
+        Returns (affected_keys_sorted, old_snapshot_csr, new_affected_csr).
+        The old snapshot covers ``snapshot_keys`` (default: all affected
+        keys) as they were BEFORE the splice; the new slice covers all
+        affected keys after.
+        """
+        affected = np.unique(np.concatenate([add_k, ret_k]))
+        old_csr = self.affected_slice(
+            affected if snapshot_keys is None else snapshot_keys)
+
+        # rebuild the affected keys' member lists
+        pos, found = searchsorted_mask(self.bk_key, affected)
+        aff_pos = pos[found]
+        old_sizes = self.bk_size[aff_pos]
+        old_k = np.repeat(self.bk_key[aff_pos], old_sizes)
+        old_r = gather_segments(self.bk_start[aff_pos], old_sizes,
+                                self.bk_members)
+        cand_k = np.concatenate([old_k, add_k])
+        cand_r = np.concatenate([old_r, add_r])
+        new_k, new_r = set_subtract_pairs(cand_k, cand_r, ret_k, ret_r)
+        uk_starts = np.flatnonzero(
+            np.concatenate([[True], new_k[1:] != new_k[:-1]])
+        ) if len(new_k) else np.zeros((0,), np.int64)
+        uk = new_k[uk_starts]
+        usz = np.diff(np.concatenate([uk_starts, [len(new_k)]])).astype(np.int64)
+
+        # new global CSR = unaffected segments merged with rebuilt segments
+        unaff = np.ones(len(self.bk_key), bool)
+        unaff[aff_pos] = False
+        pool = np.concatenate([self.bk_members, new_r])
+        seg_key = np.concatenate([self.bk_key[unaff], uk])
+        seg_start = np.concatenate(
+            [self.bk_start[unaff],
+             len(self.bk_members) + np.concatenate([[0], np.cumsum(usz)])[:-1]]
+        ).astype(np.int64)
+        seg_size = np.concatenate([self.bk_size[unaff], usz])
+        order = np.argsort(seg_key, kind="stable")
+        seg_key = seg_key[order]
+        seg_start = seg_start[order]
+        seg_size = seg_size[order]
+        self.bk_members = gather_segments(seg_start, seg_size, pool)
+        self.bk_key = seg_key
+        self.bk_size = seg_size
+        self.bk_start = (np.concatenate([[0], np.cumsum(seg_size)])[:-1]
+                         .astype(np.int64))
+
+        new_csr = blocks_from_segments(uk, usz, new_r)
+        return affected, old_csr, new_csr
+
+    # ------------------------------------------------------------------
+    # ledger
+    # ------------------------------------------------------------------
+
+    def apply_pair_deltas(self, pair_pack: np.ndarray, src: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Upsert/retract affected pairs; ``src == 0`` means uncovered.
+
+        Returns (added_pack, added_src, retracted_pack).
+        """
+        if len(pair_pack) == 0:
+            z = np.zeros((0,), np.uint64)
+            return z, np.zeros((0,), np.int64), z
+        order = np.argsort(pair_pack)
+        pair_pack, src = pair_pack[order], src[order]
+        pos, found = searchsorted_mask(self.led_pack, pair_pack)
+        to_del = found & (src == 0)
+        to_upd = found & (src > 0)
+        to_ins = ~found & (src > 0)
+        retracted = pair_pack[to_del]
+        if np.any(to_upd):
+            self.led_src[pos[to_upd]] = src[to_upd]
+        if np.any(to_ins):
+            at = pos[to_ins]
+            self.led_pack = np.insert(self.led_pack, at, pair_pack[to_ins])
+            self.led_src = np.insert(self.led_src, at, src[to_ins])
+        if np.any(to_del):
+            # positions shift after insert; recompute by search
+            dpos, dfound = searchsorted_mask(self.led_pack, retracted)
+            keep = np.ones(len(self.led_pack), bool)
+            keep[dpos[dfound]] = False
+            self.led_pack = self.led_pack[keep]
+            self.led_src = self.led_src[keep]
+        return pair_pack[to_ins], src[to_ins], retracted
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    def accepted_blocks(self, min_size: int = 1) -> pairs_mod.Blocks:
+        """Current union accepted blocks (== build_blocks of a batch run)."""
+        keep = self.bk_size >= min_size
+        members = gather_segments(self.bk_start[keep], self.bk_size[keep],
+                                  self.bk_members)
+        return blocks_from_segments(self.bk_key[keep], self.bk_size[keep],
+                                    members)
+
+    def candidate_pairs(self) -> pairs_mod.PairSet:
+        """Current candidate-pair set (== dedupe_pairs of a batch run)."""
+        a, b = unpack_pair(self.led_pack)
+        blk = self.accepted_blocks(min_size=2)
+        return pairs_mod.PairSet(a=a, b=b, src_size=self.led_src.copy(),
+                                 exact=True, total_slots=blk.num_pair_slots)
+
+    def memory_stats(self) -> Dict[str, int]:
+        out = {"num_records": self.num_records,
+               "ledger_pairs": len(self.led_pack),
+               "accepted_blocks": len(self.bk_key),
+               "accepted_assignments": len(self.bk_members)}
+        for i, st in enumerate(self.levels):
+            if st is not None:
+                out[f"level{i}_rows"] = st.num_rows
+                out[f"level{i}_entries"] = st.num_entries
+                out[f"level{i}_keys"] = len(st.tab_key)
+        return out
