@@ -83,6 +83,92 @@ def run(distributions=("small", "medium", "large", "zipf"),
         print(f"# acceptance OK: jax {accept_ratio:.2f}x >= 5x")
 
 
-if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.bench_pairs [--check]
+def run_mesh(target_slots: int = 1_200_000,
+             distributions=("small", "zipf"),
+             chunk_per_shard: int = 1 << 16,
+             check_speedup: bool = False):
+    """Routed vs global-sort distributed dedupe on an emulated host mesh.
+
+    Requires >= 2 devices (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; ``--mesh``
+    re-execs with that set). Measures ``materialize_pairs_distributed``
+    end-to-end in both dedupe modes: "global" gathers every shard's
+    decoded pairs into ONE device sort (the pre-routing bottleneck),
+    "routed" fingerprint-routes packed sort words with an all_to_all per
+    round and dedupes shard-locally, so the per-shard peak buffer stays
+    at ~total/n_shards * route_slack words instead of total.
+    """
+    import math
+
+    import jax
+
+    from repro.core.distributed import materialize_pairs_distributed
+
+    n_shards = jax.device_count()
+    assert n_shards >= 2, "mesh bench needs emulated devices (use --mesh)"
+    mesh = jax.make_mesh((n_shards,), ("data",))
+    route_slack = 2.0
+    print("# pairs-mesh: distribution,mode,seconds,pairs_per_sec,speedup_vs_global")
+    accept = None
+    for dist in distributions:
+        blk = _make_blocks(dist, target_slots)
+        total = blk.num_pair_slots
+        results = {}
+        times = {}
+        for mode in ("global", "routed"):
+            kw = dict(axis_names=("data",), chunk_per_shard=chunk_per_shard,
+                      dedupe=mode, route_slack=route_slack)
+            results[mode] = materialize_pairs_distributed(blk, mesh, **kw)
+            # best-of-3: min de-noises shared-runner scheduler contention
+            # (this timing gates the CI slow lane)
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                results[mode] = materialize_pairs_distributed(blk, mesh, **kw)
+                best = min(best, time.perf_counter() - t0)
+            times[mode] = best
+        # bit-identical contract between the two dedupe modes
+        np.testing.assert_array_equal(results["routed"].a, results["global"].a)
+        np.testing.assert_array_equal(results["routed"].b, results["global"].b)
+        np.testing.assert_array_equal(results["routed"].src_size,
+                                      results["global"].src_size)
+        # per-shard peak pair-buffer of the routed path (words), vs the
+        # full pair set the global path funnels through one device
+        cap = math.ceil(chunk_per_shard / n_shards * route_slack)
+        rounds = math.ceil(total / (n_shards * chunk_per_shard))
+        per_shard = rounds * n_shards * cap
+        assert per_shard < total, (per_shard, total)
+        for mode in ("global", "routed"):
+            speedup = times["global"] / times[mode]
+            emit(f"pairs_mesh/{dist}_{mode}", times[mode] * 1e6,
+                 f"pairs_per_s={total/times[mode]:.3g};speedup={speedup:.2f}x;"
+                 f"slots={total};shards={n_shards}")
+            print(f"pairs-mesh,{dist},{mode},{times[mode]:.4f},"
+                  f"{total/times[mode]:.3g},{speedup:.2f}")
+        print(f"#   per-shard peak buffer {per_shard} words "
+              f"({per_shard/total:.2f}x of {total} total slots)")
+        if dist == distributions[0]:
+            accept = times["global"] / times["routed"]
+    if check_speedup and accept is not None:
+        assert accept > 1.0, (
+            f"routed dedupe only {accept:.2f}x vs the global sort on "
+            f"{n_shards} emulated hosts (acceptance: >1x at >=1M slots)")
+        print(f"# acceptance OK: routed {accept:.2f}x > 1x vs global sort")
+
+
+if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.bench_pairs [--check|--mesh]
+    import os
     import sys
-    run(check_speedup="--check" in sys.argv)
+    if "--mesh" in sys.argv:
+        if "--xla_force_host_platform_device_count" not in os.environ.get(
+                "XLA_FLAGS", ""):
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                                + " --xla_force_host_platform_device_count=8").strip()
+            env.pop("JAX_PLATFORMS", None)
+            os.execve(sys.executable,
+                      [sys.executable, "-m", "benchmarks.bench_pairs"]
+                      + sys.argv[1:], env)
+        run_mesh(check_speedup="--check" in sys.argv)
+    else:
+        run(check_speedup="--check" in sys.argv)

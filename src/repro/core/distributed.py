@@ -21,7 +21,33 @@ record sharding (blocking has no "model" dimension). Per iteration:
 Record payloads never move; the only shuffled bytes are 8-byte key hashes
 and int32 sizes of the *shrinking* survivor set — the paper's minimal-
 data-movement thesis, with fixed-capacity buffers instead of dynamic
-shuffles (capacity overflows are counted, never silent).
+shuffles (capacity overflows are counted, never silent). The shared
+bucketing/exchange primitives live in ``core.routing``.
+
+Pair materialization (§3.1) reuses the same dataflow:
+``dedupe_pairs_distributed`` shards the canonical pair-slot space, packs
+every decoded pair into the kernels' 62-bit sort word, and hash-routes it
+BY PAIR FINGERPRINT (splitmix64 of the word's (a, b) bits) with one
+all_to_all per round, so the largest-block-wins sort-dedupe is
+shard-local and no device ever materializes the full pair set.
+
+Routed-dedupe contract:
+  - Bit-identical PairSets to single-device ``core.pairs.dedupe_pairs``
+    on every mesh shape (the fingerprint partitions pairs, per-shard
+    winners are disjoint, and the budget-exceeded path decodes the same
+    seeded global slot sample as every other backend).
+  - Per-shard peak pair-buffer: n_rounds * n_shards * cap words with
+    cap = ceil(chunk_per_shard / n_shards * route_slack), i.e.
+    ~ceil(total_slots / n_shards) * route_slack — the distributed
+    engine's memory knob.
+  - ``route_slack`` tuning: slack s bounds the tolerated per-destination
+    skew of the pair-fingerprint hash within one chunk; splitmix64 is
+    close to uniform, so bucket occupancy is ~Binomial(chunk, 1/n_shards)
+    and the default s=2.0 puts overflow many sigma out for chunks >= 4k.
+    Raise it (cost: linearly larger buckets) only if the driver warns —
+    overflow triggers a lossless fallback to the single-device engine,
+    never silent pair drops. Small chunks with few slots per shard
+    amplify relative skew; prefer fewer, larger rounds.
 """
 from __future__ import annotations
 
@@ -37,9 +63,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import hashing, segments, sketches, u64
+from . import hashing, routing, segments, sketches, u64
+from ..distributed import sharding
 from .hdb import (BlockingResult, HDBConfig, INT32_MAX, IterationStats,
                   RepCapacityWarning, intersect_keys)
+from .routing import route_buckets as _route
 
 logger = logging.getLogger(__name__)
 
@@ -54,57 +82,17 @@ class DistConfig:
     bloom_hashes: int = 20
 
 
-def _linear_shard_index(axis_names: Sequence[str]) -> jnp.ndarray:
-    idx = jnp.int32(0)
-    for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return idx
-
-
-def _route(khi, klo, payloads, owner, n_shards: int, cap: int):
-    """Scatter entries into per-destination buckets and all_to_all them.
-
-    Args:
-      owner: int32 destination shard per entry; use n_shards for "drop".
-    Returns routed (khi, klo, payloads, overflow_count); absent slots carry
-    sentinel keys.
-    """
-    # rank within destination group via sort by owner
-    n = owner.shape[0]
-    order = jnp.argsort(owner)  # stable not required; ranks only need uniqueness
-    owner_s = owner[order]
-    start = jnp.searchsorted(owner_s, owner, side="left")
-    # rank of each (unsorted) entry: position among same-owner entries
-    rank_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.searchsorted(
-        owner_s, owner_s, side="left").astype(jnp.int32)
-    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
-    del start
-    pos = owner * cap + rank
-    ok = (owner < n_shards) & (rank < cap)
-    overflow = jnp.sum(((owner < n_shards) & (rank >= cap)).astype(jnp.int32))
-    flat_pos = jnp.where(ok, pos, n_shards * cap)  # OOB -> dropped
-
-    def scatter(x, fill):
-        buf = jnp.full((n_shards * cap,), fill, x.dtype)
-        return buf.at[flat_pos].set(x, mode="drop").reshape(n_shards, cap)
-
-    bhi = scatter(khi, jnp.uint32(0xFFFFFFFF))
-    blo = scatter(klo, jnp.uint32(0xFFFFFFFF))
-    bpl = [scatter(p, jnp.asarray(0, p.dtype)) for p in payloads]
-    return bhi, blo, bpl, overflow
-
-
 def make_hdb_step(cfg: HDBConfig, mesh: Mesh,
                   axis_names: Sequence[str],
                   dist: DistConfig = DistConfig()):
     """Build the jitted, shard_mapped distributed HDB iteration."""
-    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    n_shards = sharding.axis_size(mesh, tuple(axis_names))
     axes = tuple(axis_names)
     bloom_cfg = sketches.BloomConfig(dist.bloom_slots, dist.bloom_hashes)
 
     def local_step(keys_packed, valid, psize):
         n_loc, k = valid.shape
-        shard = _linear_shard_index(axes)
+        shard = routing.linear_shard_index(mesh, axes)
         rid0 = shard * jnp.int32(n_loc)
         key = (keys_packed[..., 0], keys_packed[..., 1])
 
@@ -132,9 +120,7 @@ def make_hdb_step(cfg: HDBConfig, mesh: Mesh,
                           jnp.int32(n_shards))
         cap = int(np.ceil(L / n_shards * dist.route_slack))
         bhi, blo, (brid,), route_overflow = _route(khi, klo, [rid], owner, n_shards, cap)
-        bhi = jax.lax.all_to_all(bhi, axes, 0, 0, tiled=True)
-        blo = jax.lax.all_to_all(blo, axes, 0, 0, tiled=True)
-        brid = jax.lax.all_to_all(brid, axes, 0, 0, tiled=True)
+        bhi, blo, brid = routing.exchange(axes, bhi, blo, brid)
 
         # ---- owner-side exact counts + fingerprints (local sort) ----
         fhi, flo, frid = bhi.reshape(-1), blo.reshape(-1), brid.reshape(-1)
@@ -170,12 +156,8 @@ def make_hdb_step(cfg: HDBConfig, mesh: Mesh,
         r_live = rep_ok.astype(jnp.int32)
         xhi_b, xlo_b, (xsz_b, xkhi_b, xklo_b, xlive_b), x_overflow = _route(
             r_xhi, r_xlo, [r_sz, r_khi, r_klo, r_live], xowner, n_shards, xcap)
-        xhi_b = jax.lax.all_to_all(xhi_b, axes, 0, 0, tiled=True)
-        xlo_b = jax.lax.all_to_all(xlo_b, axes, 0, 0, tiled=True)
-        xsz_b = jax.lax.all_to_all(xsz_b, axes, 0, 0, tiled=True)
-        xkhi_b = jax.lax.all_to_all(xkhi_b, axes, 0, 0, tiled=True)
-        xklo_b = jax.lax.all_to_all(xklo_b, axes, 0, 0, tiled=True)
-        xlive_b = jax.lax.all_to_all(xlive_b, axes, 0, 0, tiled=True)
+        xhi_b, xlo_b, xsz_b, xkhi_b, xklo_b, xlive_b = routing.exchange(
+            axes, xhi_b, xlo_b, xsz_b, xkhi_b, xklo_b, xlive_b)
         g_xhi, g_xlo, g_sz, g_khi, g_klo, g_live = jax.lax.sort(
             (xhi_b.reshape(-1), xlo_b.reshape(-1), xsz_b.reshape(-1),
              xkhi_b.reshape(-1), xklo_b.reshape(-1), xlive_b.reshape(-1)),
@@ -258,7 +240,7 @@ def distributed_hashed_dynamic_blocking(
     """
     n = valid.shape[0]
     axes = tuple(axis_names)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n_shards = sharding.axis_size(mesh, axes)
     assert n % n_shards == 0, (n, n_shards)
     sharding3 = NamedSharding(mesh, P(axes, None, None))
     sharding2 = NamedSharding(mesh, P(axes, None))
@@ -303,35 +285,276 @@ def distributed_hashed_dynamic_blocking(
 
 
 # ---------------------------------------------------------------------------
-# Distributed pair materialization (paper §3.1 over the mesh)
+# Distributed pair materialization + fingerprint-routed dedupe (paper §3.1
+# over the mesh)
 # ---------------------------------------------------------------------------
 
 
-def materialize_pairs_distributed(
+def _pair_contract_reason(blocks, budget: int, per_round: int,
+                          exact: bool) -> Optional[str]:
+    """None if the routed distributed engine applies, else why not."""
+    from . import pairs as pairs_lib
+    from ..kernels import pairs as pairs_kernels
+
+    reason = pairs_lib._device_contract_ok(blocks, budget)
+    if reason is not None:
+        return reason
+    if not pairs_lib._packable(blocks):
+        return (f"record ids >= 2**{pairs_kernels.PACK_RID_BITS} break the "
+                "62-bit sort-word pack")
+    if exact and blocks.num_pair_slots + per_round > INT32_MAX:
+        # shard bases of the padded final round would wrap int32: base =
+        # r0 + shard*chunk can reach total + per_round - chunk - 1. The
+        # single-device guards in core/pairs.py never see per-shard
+        # offsets, so this check must live here.
+        return (f"slot space {blocks.num_pair_slots} + round {per_round} "
+                "overflows int32 at the per-shard slot offsets")
+    return None
+
+
+@functools.lru_cache(maxsize=64)
+def _make_routed_round_step(mesh, axes, n_shards: int, chunk: int, cap: int,
+                            steps: int, interpret: bool, sampled: bool):
+    """Build the jitted shard_mapped decode+pack+route+exchange round.
+
+    Exact mode decodes slots [base, base+chunk) per shard (``total`` is a
+    traced scalar operand so different datasets share one executable);
+    sampled mode decodes pre-split (block, local) slot chunks. Both
+    return this shard's routed sort-word buckets plus the psum'd route
+    overflow. Cached: repeated drivers over the same mesh geometry reuse
+    the compiled step instead of re-jitting per call.
+    """
+    from ..kernels import pairs as pairs_kernels
+
+    def shared_tail(a, b, s, v):
+        hi, lo = pairs_kernels.pack_sort_words(a, b, s, v)
+        owner = pairs_kernels.pair_route_owner(a, b, v, n_shards)
+        bhi, blo, _, overflow = routing.route_buckets(
+            hi, lo, [], owner, n_shards, cap)
+        bhi, blo = routing.exchange(axes, bhi, blo)
+        return (bhi.reshape(-1), blo.reshape(-1),
+                jax.lax.psum(overflow, axes))
+
+    if sampled:
+        def local_round(start, size, members, block, local, valid):
+            a, b, s, v = pairs_kernels.decode_block_local(
+                start, size, members, block[0], local[0], valid[0],
+                steps=steps, use_kernel=False, interpret=interpret)
+            return shared_tail(a, b, s, v)
+
+        in_specs = (P(), P(), P(), P(axes, None), P(axes, None),
+                    P(axes, None))
+    else:
+        def local_round(cum, start, size, members, base, total):
+            a, b, s, v = pairs_kernels.decode_chunk(
+                cum, start, size, members, base[0], total,
+                chunk=chunk, steps=steps, use_kernel=False,
+                interpret=interpret)
+            return shared_tail(a, b, s, v)
+
+        in_specs = (P(), P(), P(), P(), P(axes), P())
+
+    return jax.jit(shard_map(
+        local_round, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(axes), P(axes), P()), check_rep=False))
+
+
+@functools.lru_cache(maxsize=64)
+def _make_local_dedupe(mesh, axes, n_rounds: int):
+    """Build the shard-local sort-dedupe over the accumulated buckets."""
+    from ..kernels import pairs as pairs_kernels
+
+    def local_dedupe(*bufs):
+        hi = jnp.concatenate(bufs[:n_rounds])
+        lo = jnp.concatenate(bufs[n_rounds:])
+        return pairs_kernels.dedupe_packed_device(hi, lo)
+
+    specs = (P(axes),) * (2 * n_rounds)
+    return jax.jit(shard_map(
+        local_dedupe, mesh=mesh, in_specs=specs,
+        out_specs=(P(axes), P(axes), P(axes)), check_rep=False))
+
+
+@functools.lru_cache(maxsize=64)
+def _make_decode_round_step(mesh, axes, chunk: int, interpret: bool):
+    """Decode-only round of the legacy global-sort path (cached jit)."""
+    from ..kernels import pairs as pairs_kernels
+
+    def local_decode(cum, start, size, members, base, total):
+        return pairs_kernels.decode_chunk(
+            cum, start, size, members, base[0], total,
+            chunk=chunk, use_kernel=False, interpret=interpret)
+
+    return jax.jit(shard_map(
+        local_decode, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(axes), P()),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+        check_rep=False))
+
+
+def dedupe_pairs_distributed(
     blocks, mesh: Mesh, axis_names: Sequence[str] = ("data",),
     budget: int = 50_000_000, chunk_per_shard: int = 1 << 18,
-    interpret: bool = True, sample_seed: int = 0,
+    route_slack: float = 2.0, interpret: bool = True, sample_seed: int = 0,
 ):
-    """Shard pair-slot decoding over the mesh; dedupe once at the end.
+    """Fingerprint-routed distributed pair dedupe (no global sort).
 
-    The canonical pair-slot space [0, total) is round-robined over shards
-    in fixed ``chunk_per_shard`` chunks via shard_map — slot decoding is
-    embarrassingly parallel (every shard holds the replicated CSR arrays
-    and decodes a disjoint contiguous slot range, the same computation as
-    ``kernels.pairs.decode_chunk``). The largest-block-wins dedupe needs
-    one global sort, which runs once over the bounded (<= budget + pad)
-    pair buffer. Output is bit-identical to
-    ``core.pairs.dedupe_pairs(blocks)`` on a single device.
+    Mirrors the HDB all_to_all dataflow: every shard decodes its slice of
+    the canonical pair-slot space in fixed ``chunk_per_shard`` chunks
+    (``kernels.pairs.decode_chunk``), packs each pair into the 62-bit
+    sort word, and routes it to ``owner = splitmix64((a << 23) | b) %
+    n_shards`` with the shared ``routing.route_buckets`` + one
+    ``all_to_all`` per round. Since ownership depends only on (a, b),
+    all occurrences of a pair meet on one shard, so the largest-block-
+    wins sort-dedupe runs SHARD-LOCALLY over ~total/n_shards words —
+    no device ever holds the full pair set. Shard winner sets are
+    disjoint by construction; the host merges them with one u64 sort of
+    the (much smaller) deduped output.
 
-    Budget-exceeded (sampling) and int32-contract fallbacks delegate to
-    the single-device driver.
+    Contract: bit-identical PairSets to single-device
+    ``core.pairs.dedupe_pairs`` (any backend) for both the exact and the
+    budget-exceeded sampled path (the uniform slot sample is global and
+    seeded, shared with every other backend). Per-shard peak pair-buffer
+    size is ceil(total/n_shards) * route_slack words (n_rounds *
+    n_shards * cap with cap = ceil(chunk/n_shards * route_slack)).
+    Routing overflow beyond ``route_slack`` is detected per round and
+    falls back to the single-device driver rather than dropping pairs.
     """
     from . import pairs as pairs_lib
     from ..kernels import pairs as pairs_kernels
     from ..kernels.pairs import ref as pairs_ref
 
     axes = tuple(axis_names)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n_shards = sharding.axis_size(mesh, axes)
+    total = blocks.num_pair_slots
+    exact = total <= budget
+    # the backend-shared seeded global sample (bit-identical to every
+    # single-device backend); drawn up front so the chunk clamp below
+    # sees the real workload
+    slots = (None if exact
+             else pairs_lib._sample_slots(total, budget, sample_seed))
+    workload = total if exact else len(slots)
+    if total > 0 and workload == 0:
+        # budget <= 0 draws an empty sample; every backend returns the
+        # empty inexact PairSet (counting stays exact via total_slots)
+        return pairs_lib._empty_pairset(False, total)
+    # clamp the per-shard chunk to the workload (mirrors _dedupe_device):
+    # small samples/totals must not pay for full chunk_per_shard lanes
+    chunk = min(chunk_per_shard,
+                pairs_lib._round_up(max(1, -(-workload // n_shards)), 1024))
+    per_round = n_shards * chunk
+    reason = _pair_contract_reason(blocks, budget, per_round, exact)
+    if total == 0 or reason is not None:
+        if reason is not None:
+            warnings.warn(f"routed distributed pairs unavailable ({reason}); "
+                          "using single-device driver", RuntimeWarning,
+                          stacklevel=2)
+        return pairs_lib.dedupe_pairs(blocks, budget=budget,
+                                      sample_seed=sample_seed,
+                                      interpret=interpret)
+
+    start32 = jnp.asarray(blocks.start, jnp.int32)
+    size32 = jnp.asarray(blocks.size, jnp.int32)
+    mem32 = jnp.asarray(blocks.members, jnp.int32)
+    steps = pairs_kernels.search_steps_for(int(blocks.size.max()))
+    cap = int(np.ceil(chunk / n_shards * route_slack))
+    step = _make_routed_round_step(mesh, axes, n_shards, chunk, cap,
+                                   steps, interpret, sampled=not exact)
+
+    rhi, rlo, ovfs = [], [], []
+    if exact:
+        cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
+        total32 = jnp.asarray(total, jnp.int32)
+        shard_offsets = np.arange(n_shards, dtype=np.int32) * chunk
+        for r0 in range(0, total, per_round):
+            base = jnp.asarray(np.int32(r0) + shard_offsets)
+            bhi, blo, ovf = step(cum32, start32, size32, mem32, base, total32)
+            rhi.append(bhi); rlo.append(blo); ovfs.append(ovf)
+    else:
+        # budget-exceeded: decode the sample drawn above, split
+        # block/local host-side because global slot indices are int64
+        cum = pairs_ref.cum_pair_counts(blocks.size)
+        block = (np.searchsorted(cum, slots, side="right") - 1).astype(np.int32)
+        local = (slots - cum[block]).astype(np.int32)
+        valid = np.ones(len(slots), bool)
+        pad = (-len(slots)) % per_round
+        if pad:
+            block = np.pad(block, (0, pad))
+            local = np.pad(local, (0, pad))
+            valid = np.pad(valid, (0, pad))
+        for off in range(0, len(block), per_round):
+            sl = slice(off, off + per_round)
+            bhi, blo, ovf = step(start32, size32, mem32,
+                                 jnp.asarray(block[sl].reshape(n_shards, chunk)),
+                                 jnp.asarray(local[sl].reshape(n_shards, chunk)),
+                                 jnp.asarray(valid[sl].reshape(n_shards, chunk)))
+            rhi.append(bhi); rlo.append(blo); ovfs.append(ovf)
+    # one deferred host sync: rounds pipeline freely in the common
+    # no-overflow case, and the fallback discards the buckets anyway
+    if any(int(o) for o in ovfs):
+        warnings.warn(
+            f"routed pair dedupe overflowed a bucket (cap {cap}, slack "
+            f"{route_slack}); falling back to the single-device driver — "
+            "raise route_slack to keep the routed path",
+            RepCapacityWarning, stacklevel=2)
+        return pairs_lib.dedupe_pairs(blocks, budget=budget,
+                                      sample_seed=sample_seed,
+                                      interpret=interpret)
+
+    if jax.default_backend() == "cpu":
+        # CPU mirror of the single-device driver's packed strategy: each
+        # shard's routed bucket is sorted with numpy's u64 sort (host ==
+        # device memory on CPU, and np.sort beats XLA CPU's comparator
+        # sort ~40x). Still shard-local: one bounded bucket at a time.
+        per_round_words = [
+            ((np.asarray(h).astype(np.uint64) << np.uint64(32))
+             | np.asarray(l).astype(np.uint64)).reshape(n_shards, -1)
+            for h, l in zip(rhi, rlo)]
+        words = np.concatenate([
+            pairs_kernels.dedupe_words_host(
+                np.concatenate([wr[s] for wr in per_round_words]))
+            for s in range(n_shards)])
+    else:
+        dedupe = _make_local_dedupe(mesh, axes, len(rhi))
+        shi, slo, winner = dedupe(*rhi, *rlo)
+        w = np.asarray(winner)
+        words = ((np.asarray(shi).astype(np.uint64) << np.uint64(32))
+                 | np.asarray(slo).astype(np.uint64))[w]
+    # shard winner sets are disjoint: one host sort of the deduped output
+    # restores the canonical global (a, b) order
+    a, b, s = pairs_kernels.unpack_words_host(np.sort(words))
+    return pairs_lib.PairSet(a=a, b=b, src_size=s, exact=exact,
+                             total_slots=total)
+
+
+def materialize_pairs_distributed(
+    blocks, mesh: Mesh, axis_names: Sequence[str] = ("data",),
+    budget: int = 50_000_000, chunk_per_shard: int = 1 << 18,
+    interpret: bool = True, sample_seed: int = 0,
+    dedupe: str = "routed", route_slack: float = 2.0,
+):
+    """Shard pair-slot decoding over the mesh and dedupe the result.
+
+    ``dedupe="routed"`` (default) is the fingerprint-routed shard-local
+    dedupe (``dedupe_pairs_distributed``); ``dedupe="global"`` keeps the
+    legacy single global sort over the gathered pair buffer — retained as
+    the benchmark baseline (``benchmarks/bench_pairs.py --mesh``) and for
+    A/B debugging. Both are bit-identical to the single-device engine.
+    """
+    if dedupe == "routed":
+        return dedupe_pairs_distributed(
+            blocks, mesh, axis_names, budget=budget,
+            chunk_per_shard=chunk_per_shard, route_slack=route_slack,
+            interpret=interpret, sample_seed=sample_seed)
+    if dedupe != "global":
+        raise ValueError(f"dedupe must be 'routed' or 'global', got {dedupe!r}")
+
+    from . import pairs as pairs_lib
+    from ..kernels import pairs as pairs_kernels
+    from ..kernels.pairs import ref as pairs_ref
+
+    axes = tuple(axis_names)
+    n_shards = sharding.axis_size(mesh, axes)
     chunk = chunk_per_shard
     per_round = n_shards * chunk
     total = blocks.num_pair_slots
@@ -352,23 +575,14 @@ def materialize_pairs_distributed(
     start32 = jnp.asarray(blocks.start, jnp.int32)
     size32 = jnp.asarray(blocks.size, jnp.int32)
     mem32 = jnp.asarray(blocks.members, jnp.int32)
-
-    def local_decode(cum, start, size, members, base):
-        return pairs_kernels.decode_chunk(
-            cum, start, size, members, base[0], jnp.int32(total),
-            chunk=chunk, use_kernel=False, interpret=interpret)
-
-    mapped = jax.jit(shard_map(
-        local_decode, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(axes)),
-        out_specs=(P(axes), P(axes), P(axes), P(axes)),
-        check_rep=False))
+    total32 = jnp.asarray(total, jnp.int32)
+    mapped = _make_decode_round_step(mesh, axes, chunk, interpret)
 
     shard_offsets = np.arange(n_shards, dtype=np.int32) * chunk
     out_a, out_b, out_s, out_v = [], [], [], []
     for r0 in range(0, total, per_round):
         base = jnp.asarray(np.int32(r0) + shard_offsets)
-        a, b, s, v = mapped(cum32, start32, size32, mem32, base)
+        a, b, s, v = mapped(cum32, start32, size32, mem32, base, total32)
         out_a.append(np.asarray(a)); out_b.append(np.asarray(b))
         out_s.append(np.asarray(s)); out_v.append(np.asarray(v))
     sa, sb, ss, winner = pairs_kernels.dedupe_device(

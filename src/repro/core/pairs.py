@@ -15,7 +15,9 @@ cross-block dedupe therefore runs on device through the
   (interpret mode on CPU). ``"auto"`` picks ``"jax"`` when the int32
   device contract holds (all rids < 2**31, block sizes <=
   ``kernels.pairs.MAX_BLOCK_N``, budget < 2**31) and falls back to numpy
-  otherwise.
+  otherwise; ``"distributed"`` dispatches to the fingerprint-routed
+  shard-local dedupe over a device mesh
+  (``core.distributed.dedupe_pairs_distributed``).
 - chunking contract: device backends enumerate the canonical pair-slot
   space (blocks in CSR order, row-major triangle within a block — see
   ``kernels/pairs/ref.py``) in fixed-shape chunks of ``chunk_pairs``
@@ -176,7 +178,7 @@ class PairSet:
 # Backend selection + sampling fallback (shared host plumbing)
 # ---------------------------------------------------------------------------
 
-_BACKENDS = ("auto", "numpy", "jax", "pallas")
+_BACKENDS = ("auto", "numpy", "jax", "pallas", "distributed")
 # below this many pair slots, jit dispatch overhead beats the numpy loop
 # (measured crossover, see module docstring); "auto" stays host-side there
 _AUTO_NUMPY_CROSSOVER = 10_000
@@ -199,6 +201,7 @@ def _device_contract_ok(blocks: Blocks, budget: int) -> Optional[str]:
 def _resolve_backend(backend: str, blocks: Blocks, budget: int) -> str:
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    assert backend != "distributed"  # dispatched before resolution
     if backend == "numpy":
         return "numpy"
     if backend == "auto" and blocks.num_pair_slots < _AUTO_NUMPY_CROSSOVER:
@@ -339,7 +342,9 @@ def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
 
 def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
                  backend: str = "auto", chunk_pairs: int = 1 << 20,
-                 sample_seed: int = 0, interpret: bool = True) -> PairSet:
+                 sample_seed: int = 0, interpret: bool = True,
+                 mesh=None, axis_names: Tuple[str, ...] = ("data",),
+                 route_slack: float = 2.0) -> PairSet:
     """RemoveDupePairs: distinct (a, b), keeping the largest source block.
 
     Within ``budget`` total pair slots the result is exact; beyond it the
@@ -347,10 +352,27 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
     (``exact=False``) — counting stays exact via ``total_slots``. All
     backends produce bit-identical PairSets for the same arguments; see
     the module docstring for the backend/chunking contract.
+
+    ``backend="distributed"`` routes through the fingerprint-routed
+    shard-local dedupe over ``mesh`` (all local devices on one "data"
+    axis when ``mesh`` is None) — see
+    ``core.distributed.dedupe_pairs_distributed`` for the contract;
+    ``chunk_pairs`` becomes the per-shard chunk and the budget sample
+    stays the seeded global one, so results remain bit-identical to
+    every single-device backend.
     """
     total = blocks.num_pair_slots
     if total == 0:
         return _empty_pairset(True, total)
+    if backend == "distributed":
+        from . import distributed as dist_lib
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            axis_names = ("data",)
+        return dist_lib.dedupe_pairs_distributed(
+            blocks, mesh, axis_names, budget=budget,
+            chunk_per_shard=chunk_pairs, route_slack=route_slack,
+            interpret=interpret, sample_seed=sample_seed)
     exact = total <= budget
     slots = None if exact else _sample_slots(total, budget, sample_seed)
     backend = _resolve_backend(backend, blocks, budget)
@@ -376,6 +398,11 @@ def enumerate_pairs(blocks: Blocks, backend: str = "auto",
     Used by consumers that need multiplicities (e.g. meta-blocking's CBS
     edge weighting) rather than the deduped pair set.
     """
+    if backend == "distributed":
+        raise ValueError(
+            "enumerate_pairs streams raw pre-dedupe chunks and has no "
+            "distributed backend; use dedupe_pairs(backend='distributed') "
+            "or a single-device backend here")
     # enumeration is always exact, so the WHOLE slot space must fit the
     # device's int32 slot indices (dedupe_pairs only needs budget to fit —
     # its sampled path never materializes global slot indices on device);

@@ -83,7 +83,13 @@ def active_rules() -> Optional[ShardingRules]:
     return _ACTIVE.get()
 
 
-def _axis_size(mesh: Mesh, ax) -> int:
+def axis_size(mesh: Mesh, ax) -> int:
+    """Total device count over a mesh axis, axis tuple, or None (=1).
+
+    Shared by the logical-sharding guard below and the blocking-side
+    routed exchanges (``core.distributed``), which need the flat shard
+    count of their data-axes tuple.
+    """
     if ax is None:
         return 1
     axes = ax if isinstance(ax, tuple) else (ax,)
@@ -101,7 +107,7 @@ def guard_spec(mesh: Mesh, shape, spec: P) -> P:
     """
     fixed = []
     for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        fixed.append(ax if (ax is not None and dim % _axis_size(mesh, ax) == 0)
+        fixed.append(ax if (ax is not None and dim % axis_size(mesh, ax) == 0)
                      else None)
     return P(*fixed)
 

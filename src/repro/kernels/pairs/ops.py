@@ -51,6 +51,8 @@ _TILE = 8 * _LANES  # minimum int32 tile footprint of the Pallas kernel
 PACK_RID_BITS = 23
 _PACK_SIZE_BITS = 16
 _SIZE_MASK = (1 << _PACK_SIZE_BITS) - 1  # == MAX_BLOCK_N
+# splitmix64 seed of the pair-fingerprint shard routing (see ref.py mirror)
+ROUTE_SEED = 0x9A12
 
 
 def tri_decode_jnp(local: jnp.ndarray, n: jnp.ndarray,
@@ -159,6 +161,22 @@ def pack_sort_words(a: jnp.ndarray, b: jnp.ndarray, src_size: jnp.ndarray,
     return (jnp.where(valid, hi, sentinel), jnp.where(valid, lo, sentinel))
 
 
+def dedupe_words_host(w: np.ndarray) -> np.ndarray:
+    """u64 sort words -> sorted winner words (largest-block-wins).
+
+    One ``np.sort``, sentinel truncation, and a first-of-(a, b)-run mask;
+    the host mirror of ``dedupe_packed_device``. Shared by the
+    single-device CPU driver and the per-shard buckets of the routed
+    distributed dedupe.
+    """
+    w = np.sort(w)
+    w = w[: np.searchsorted(w, np.uint64(1) << np.uint64(62))]  # drop sentinels
+    if len(w) == 0:
+        return w
+    run = w >> np.uint64(_PACK_SIZE_BITS)  # the (a, b) part
+    return w[np.concatenate([[True], run[1:] != run[:-1]])]
+
+
 def dedupe_packed_host(hi: np.ndarray, lo: np.ndarray
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Host sort of packed words -> compacted (a, b, src_size) winners.
@@ -168,14 +186,52 @@ def dedupe_packed_host(hi: np.ndarray, lo: np.ndarray
     IS device memory there, so this costs no extra transfer).
     """
     w = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
-    w = np.sort(w)
-    w = w[: np.searchsorted(w, np.uint64(1) << np.uint64(62))]  # drop sentinels
-    if len(w) == 0:
-        z = np.zeros((0,), np.int64)
-        return z, z, z
-    run = w >> np.uint64(_PACK_SIZE_BITS)  # the (a, b) part
-    first = np.concatenate([[True], run[1:] != run[:-1]])
-    w = w[first]
+    return unpack_words_host(dedupe_words_host(w))
+
+
+def pair_route_owner(a: jnp.ndarray, b: jnp.ndarray, valid: jnp.ndarray,
+                     n_shards: int) -> jnp.ndarray:
+    """Owning shard of pair (a, b) for the fingerprint-routed dedupe.
+
+    The fingerprint hashes ONLY the 46-bit run id ``(a << 23) | b`` — the
+    sort word WITHOUT its size bits — so every occurrence of a pair lands
+    on the same shard no matter which block produced it (that invariant
+    is what makes shard-local dedupe globally correct). Bit-exact numpy
+    mirror: ``ref.np_pair_route_owner``. Invalid lanes get ``n_shards``
+    (the route_buckets drop sentinel). Requires a, b < 2**PACK_RID_BITS.
+    """
+    from ...core import hashing  # local import: core.pairs imports this module
+    au = a.astype(jnp.uint32)
+    bu = b.astype(jnp.uint32)
+    run_hi = au >> 9                              # (a << 23 | b) >> 32
+    run_lo = ((au & 0x1FF) << 23) | bu            # low 32 bits of the run id
+    _, h_lo = hashing.hash_u64((run_hi, run_lo), seed=ROUTE_SEED)
+    owner = (h_lo % jnp.uint32(n_shards)).astype(jnp.int32)
+    return jnp.where(valid, owner, jnp.int32(n_shards))
+
+
+def dedupe_packed_device(hi: jnp.ndarray, lo: jnp.ndarray):
+    """Shard-local dedupe of packed sort words: 2-key sort + winner mask.
+
+    The device mirror of ``dedupe_packed_host`` for use INSIDE shard_map
+    (jit-free so it inherits the caller's tracing): sorts the uint32 limb
+    pair lexicographically — identical order to the u64 word — and marks
+    the first element of each (a, b) run. Sentinel (all-ones) lanes sort
+    to the tail and are never winners. Returns (hi_sorted, lo_sorted,
+    winner_mask).
+    """
+    shi, slo = jax.lax.sort((hi, lo), num_keys=2)
+    # run id = word >> 16 == (a << 23) | b: equal iff hi AND lo>>16 match
+    srun = slo >> 16
+    live = ~((shi == jnp.uint32(0xFFFFFFFF)) & (slo == jnp.uint32(0xFFFFFFFF)))
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool),
+         (shi[1:] != shi[:-1]) | (srun[1:] != srun[:-1])])
+    return shi, slo, live & first
+
+
+def unpack_words_host(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """u64 sort words -> (a, b, src_size) int64 triplets (host side)."""
     a = (w >> np.uint64(39)).astype(np.int64)
     b = ((w >> np.uint64(16)) & np.uint64((1 << PACK_RID_BITS) - 1)).astype(np.int64)
     s = (np.uint64(_SIZE_MASK) - (w & np.uint64(_SIZE_MASK))).astype(np.int64)

@@ -78,6 +78,45 @@ def decode_slots_ref(start: np.ndarray, size: np.ndarray, members: np.ndarray,
     return np.minimum(a, b), np.maximum(a, b), n
 
 
+def np_pair_route_owner(a: np.ndarray, b: np.ndarray, n_shards: int
+                        ) -> np.ndarray:
+    """Owning shard of each pair under fingerprint routing (host mirror).
+
+    Bit-exact with ``ops.pair_route_owner``: splitmix64 of the 46-bit run
+    id ``(a << 23) | b`` (the sort word without its size bits), low 32
+    bits mod ``n_shards``. Defined here so oracle tests can build the
+    expected per-shard partition without touching device code.
+    """
+    from ...core import hashing  # numpy mirror only; no device deps
+
+    run = (np.asarray(a, np.uint64) << np.uint64(23)) | np.asarray(b, np.uint64)
+    h = hashing.np_hash_u64_vec(run, seed=0x9A12)  # == ops.ROUTE_SEED
+    return ((h & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+            % np.uint32(n_shards)).astype(np.int32)
+
+
+def dedupe_routed_ref(a: np.ndarray, b: np.ndarray, src_size: np.ndarray,
+                      n_shards: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Oracle for the routed layout: per-shard dedupe, then merge.
+
+    Routes every raw pair to its fingerprint owner, runs the plain
+    ``dedupe_ref`` independently per shard, and merges the shard outputs
+    back into canonical (a, b) order. Because routing is a pure function
+    of (a, b), the shards partition the distinct-pair set and the merge
+    MUST equal a global ``dedupe_ref`` — that identity is what the parity
+    tests assert.
+    """
+    owner = np_pair_route_owner(a, b, n_shards)
+    outs = [dedupe_ref(a[owner == s], b[owner == s], src_size[owner == s])
+            for s in range(n_shards)]
+    ca = np.concatenate([o[0] for o in outs])
+    cb = np.concatenate([o[1] for o in outs])
+    cs = np.concatenate([o[2] for o in outs])
+    order = np.lexsort((cb, ca))
+    return ca[order], cb[order], cs[order]
+
+
 def dedupe_ref(a: np.ndarray, b: np.ndarray, src_size: np.ndarray
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Distinct (a, b) sorted ascending, keeping the LARGEST source block.

@@ -224,7 +224,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                  "temp_size_in_bytes", "alias_size_in_bytes",
                  "generated_code_size_in_bytes"):
         mem_d[attr] = getattr(mem, attr, None)
+    # newer jaxlibs return a per-device list of cost dicts, older ones a
+    # bare dict (same normalization as tests/test_roofline.py)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     roof, hlo_cost = analyze(hlo_text, chips)
     t_analyze = time.time()

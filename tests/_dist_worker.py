@@ -12,12 +12,50 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import blocks, hdb, distributed
+from repro.core import blocks, hdb, distributed, pairs
 from repro.data import synthetic
 
 
 def key_set(r):
     return set(zip(r.rids.tolist(), r.key_hi.tolist(), r.key_lo.tolist()))
+
+
+def assert_pairsets_equal(got, want, label):
+    assert got.exact == want.exact, label
+    assert got.total_slots == want.total_slots, label
+    np.testing.assert_array_equal(got.a, want.a, err_msg=label)
+    np.testing.assert_array_equal(got.b, want.b, err_msg=label)
+    np.testing.assert_array_equal(got.src_size, want.src_size, err_msg=label)
+
+
+def check_routed_pair_dedupe(mesh_kind, mesh, axes, ref):
+    """Routed distributed dedupe must be bit-identical to the numpy oracle
+    on this mesh — exact path, budget-exceeded sampled path, and an
+    empty-shard layout where whole shards receive no pairs."""
+    blk = pairs.build_blocks(ref)
+    want = pairs.dedupe_pairs(blk, backend="numpy")
+    got = distributed.dedupe_pairs_distributed(blk, mesh, axes,
+                                               chunk_per_shard=4096)
+    assert_pairsets_equal(got, want, f"routed-exact {mesh_kind}")
+    assert len(want.a) > 100, "blocking produced too few pairs to be a real test"
+
+    budget = blk.num_pair_slots // 3
+    want_s = pairs.dedupe_pairs(blk, budget=budget, backend="numpy",
+                                sample_seed=13)
+    got_s = distributed.dedupe_pairs_distributed(
+        blk, mesh, axes, budget=budget, chunk_per_shard=1024, sample_seed=13)
+    assert not got_s.exact
+    assert_pairsets_equal(got_s, want_s, f"routed-sampled {mesh_kind}")
+
+    # empty-shard edge: 1 tiny block => single pair, 7 of 8 shards idle
+    one = pairs.Blocks(np.zeros(1, np.uint32), np.zeros(1, np.uint32),
+                       np.zeros(1, np.int64), np.array([2], np.int64),
+                       np.array([3, 9], np.int64))
+    want_e = pairs.dedupe_pairs(one, backend="numpy")
+    got_e = distributed.dedupe_pairs_distributed(one, mesh, axes,
+                                                 chunk_per_shard=256)
+    assert_pairsets_equal(got_e, want_e, f"routed-empty-shard {mesh_kind}")
+    print("OK-PAIRS", mesh_kind)
 
 
 def main(mesh_kind: str):
@@ -57,6 +95,7 @@ def main(mesh_kind: str):
     for st_r, st_g in zip(ref.stats, got.stats):
         assert st_r.n_surviving_oversized == st_g.n_surviving_oversized, (st_r, st_g)
         assert st_r.n_right_cms == st_g.n_right_cms, (st_r, st_g)
+    check_routed_pair_dedupe(mesh_kind, mesh, axes, ref)
     print("OK", mesh_kind)
 
 

@@ -15,9 +15,12 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.core import blocks as blocks_mod, hdb, pairs
-from repro.core.distributed import materialize_pairs_distributed
+from repro.core.distributed import (dedupe_pairs_distributed,
+                                    materialize_pairs_distributed)
 from repro.kernels.pairs import (MAX_BLOCK_N, decode_chunk, dedupe_device,
-                                 tri_decode_jnp, tri_decode_pallas)
+                                 dedupe_packed_device, pack_sort_words,
+                                 pair_route_owner, tri_decode_jnp,
+                                 tri_decode_pallas, unpack_words_host)
 from repro.kernels.pairs import ref as pairs_ref
 from repro.data import synthetic
 
@@ -206,10 +209,180 @@ def test_engine_on_real_hdb_blocks():
 def test_distributed_materialization_matches_single_device():
     blk = _random_blocks(4, 50, 30, universe=600)
     mesh = jax.make_mesh((1,), ("data",))
-    got = materialize_pairs_distributed(blk, mesh, ("data",),
-                                        chunk_per_shard=2048)
+    for dedupe in ("routed", "global"):
+        got = materialize_pairs_distributed(blk, mesh, ("data",),
+                                            chunk_per_shard=2048,
+                                            dedupe=dedupe)
+        want = pairs.dedupe_pairs(blk, backend="numpy")
+        _assert_pairsets_equal(got, want, f"distributed-{dedupe}")
+
+
+# ---------------------------------------------------------------------------
+# fingerprint-routed dedupe: oracle layout + shard-local ops
+# (multi-device parity for all three mesh kinds runs in _dist_worker.py —
+# the main test process is locked to 1 device)
+# ---------------------------------------------------------------------------
+
+
+def _raw_pairs(blk):
+    chunks = [(np.minimum(a, b), np.maximum(a, b), s)
+              for a, b, s in pairs.iter_block_pairs(blk)]
+    return (np.concatenate([c[0] for c in chunks]),
+            np.concatenate([c[1] for c in chunks]),
+            np.concatenate([c[2] for c in chunks]))
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_routed_oracle_equals_global_dedupe(n_shards):
+    """Per-shard dedupe over the fingerprint partition, merged, must equal
+    the global dedupe — the identity the routed distributed path rests on."""
+    blk = _random_blocks(11, 40, 30, universe=400)
+    ra, rb, rs = _raw_pairs(blk)
+    oa, ob, os_ = pairs_ref.dedupe_routed_ref(ra, rb, rs, n_shards)
+    wa, wb, ws = pairs_ref.dedupe_ref(ra, rb, rs)
+    np.testing.assert_array_equal(oa, wa)
+    np.testing.assert_array_equal(ob, wb)
+    np.testing.assert_array_equal(os_, ws)
+
+
+def test_pair_route_owner_matches_numpy_mirror():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 1 << 23, 4096).astype(np.int32)
+    b = rng.integers(0, 1 << 23, 4096).astype(np.int32)
+    valid = rng.random(4096) < 0.9
+    got = np.asarray(pair_route_owner(jnp.asarray(a), jnp.asarray(b),
+                                      jnp.asarray(valid), 8))
+    want = np.where(valid, pairs_ref.np_pair_route_owner(a, b, 8), 8)
+    np.testing.assert_array_equal(got, want)
+    # owners must be well spread (splitmix64 avalanche)
+    counts = np.bincount(got[valid], minlength=8)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_dedupe_packed_device_matches_host():
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 500, 2048).astype(np.int32)
+    b = (a + rng.integers(1, 100, 2048)).astype(np.int32)
+    s = rng.integers(2, 600, 2048).astype(np.int32)
+    valid = rng.random(2048) < 0.8
+    hi, lo = pack_sort_words(jnp.asarray(a), jnp.asarray(b), jnp.asarray(s),
+                             jnp.asarray(valid))
+    shi, slo, winner = dedupe_packed_device(hi, lo)
+    w = np.asarray(winner)
+    words = ((np.asarray(shi).astype(np.uint64) << np.uint64(32))
+             | np.asarray(slo).astype(np.uint64))[w]
+    ga, gb, gs = unpack_words_host(np.sort(words))
+    wa, wb, ws = pairs_ref.dedupe_ref(a[valid], b[valid], s[valid])
+    np.testing.assert_array_equal(ga, wa)
+    np.testing.assert_array_equal(gb, wb)
+    np.testing.assert_array_equal(gs, ws)
+
+
+def test_routed_dedupe_single_device_mesh_all_paths():
+    """1-device mesh exercises the full routed machinery (pack, route,
+    all_to_all, shard-local dedupe) without subprocess devices."""
+    blk = _random_blocks(21, 30, 25, universe=300)
+    mesh = jax.make_mesh((1,), ("data",))
     want = pairs.dedupe_pairs(blk, backend="numpy")
-    _assert_pairsets_equal(got, want, "distributed")
+    got = dedupe_pairs_distributed(blk, mesh, ("data",), chunk_per_shard=1024)
+    _assert_pairsets_equal(got, want, "routed-1dev-exact")
+    # budget-exceeded sampling path (global seeded sample)
+    budget = blk.num_pair_slots // 4
+    want_s = pairs.dedupe_pairs(blk, budget=budget, backend="numpy",
+                                sample_seed=3)
+    got_s = dedupe_pairs_distributed(blk, mesh, ("data",), budget=budget,
+                                     chunk_per_shard=512, sample_seed=3)
+    _assert_pairsets_equal(got_s, want_s, "routed-1dev-sampled")
+    # backend dispatch through the core driver
+    got_d = pairs.dedupe_pairs(blk, backend="distributed", chunk_pairs=1024)
+    _assert_pairsets_equal(got_d, want, "backend-distributed")
+
+
+def test_routed_dedupe_zero_budget_returns_empty_inexact():
+    blk = _random_blocks(2, 5, 6, universe=60)
+    mesh = jax.make_mesh((1,), ("data",))
+    p = dedupe_pairs_distributed(blk, mesh, ("data",), budget=0)
+    assert not p.exact and len(p.a) == 0
+    assert p.total_slots == blk.num_pair_slots  # counting stays exact
+
+
+def test_enumerate_pairs_rejects_distributed_backend():
+    blk = _random_blocks(2, 5, 6, universe=60)
+    with pytest.raises(ValueError, match="no.*distributed backend"):
+        next(pairs.enumerate_pairs(blk, backend="distributed"))
+
+
+def test_routed_dedupe_empty_and_tiny():
+    mesh = jax.make_mesh((1,), ("data",))
+    z64 = np.zeros((0,), np.int64)
+    zu = np.zeros((0,), np.uint32)
+    empty = pairs.Blocks(zu, zu, z64, z64, z64)
+    p = dedupe_pairs_distributed(empty, mesh, ("data",))
+    assert p.exact and len(p.a) == 0 and p.total_slots == 0
+    one = pairs.Blocks(np.zeros(1, np.uint32), np.zeros(1, np.uint32),
+                       np.zeros(1, np.int64), np.array([2], np.int64),
+                       np.array([7, 42], np.int64))
+    p1 = dedupe_pairs_distributed(one, mesh, ("data",), chunk_per_shard=256)
+    assert p1.exact and list(p1.a) == [7] and list(p1.b) == [42]
+
+
+def test_routed_dedupe_falls_back_beyond_pack_bound():
+    """rids >= 2**PACK_RID_BITS can't take the packed routed path; the
+    driver must fall back to the single-device engine, not mis-pack."""
+    from repro.kernels.pairs import PACK_RID_BITS
+    blk = _random_blocks(9, 12, 10, universe=200)
+    big = pairs.Blocks(blk.key_hi, blk.key_lo, blk.start, blk.size,
+                       blk.members + (1 << PACK_RID_BITS))
+    mesh = jax.make_mesh((1,), ("data",))
+    want = pairs.dedupe_pairs(big, backend="numpy")
+    with pytest.warns(RuntimeWarning, match="62-bit sort-word pack"):
+        got = dedupe_pairs_distributed(big, mesh, ("data",))
+    _assert_pairsets_equal(got, want, "routed-pack-fallback")
+
+
+def test_routed_int32_guard_at_slot_edge(monkeypatch):
+    """Per-shard slot offsets near 2**31: the routed driver must refuse
+    layouts where base + per_round wraps int32 (the single-device guards
+    in core/pairs.py never see per-shard offsets) and fall back."""
+    n = MAX_BLOCK_N  # C(65535, 2) = 2_147_418_113, just under 2**31
+    blk = pairs.Blocks(np.zeros(1, np.uint32), np.zeros(1, np.uint32),
+                       np.zeros(1, np.int64), np.array([n], np.int64),
+                       np.arange(n, dtype=np.int64))
+    total = blk.num_pair_slots
+    assert total + (1 << 18) > 2**31 - 1 > total  # sits exactly at the edge
+    sentinel = object()
+    monkeypatch.setattr(pairs, "dedupe_pairs", lambda *a, **k: sentinel)
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.warns(RuntimeWarning, match="overflows int32"):
+        got = dedupe_pairs_distributed(blk, mesh, ("data",),
+                                       budget=2**31 - 2)
+    assert got is sentinel  # fell back without decoding 2B slots
+
+
+def test_routed_decode_validity_at_int32_slot_edge_per_shard_bases():
+    """Routed-boundary companion of
+    test_decode_chunk_validity_immune_to_int32_wrap: at the largest total
+    the routed guard admits (total + n_shards*chunk <= 2**31 - 1), the
+    final round's per-shard bases overshoot r0 by shard*chunk — the
+    straddling shard must mask its tail and fully-past-the-end shards
+    must decode nothing, with no int32 wrap corrupting validity."""
+    n_shards, chunk = 8, 1024
+    per_round = n_shards * chunk
+    total = 2**31 - 1 - per_round  # guard-admitted maximum
+    cum = jnp.asarray([0, total], jnp.int32)
+    start = jnp.zeros(1, jnp.int32)
+    size = jnp.asarray([3], jnp.int32)
+    members = jnp.asarray([0, 1, 2], jnp.int32)
+    r0 = (total // per_round) * per_round
+    for shard in range(n_shards):
+        base = r0 + shard * chunk
+        assert base + chunk <= 2**31 - 1  # the invariant the guard enforces
+        live = max(0, min(chunk, total - base))
+        _, _, _, v = decode_chunk(cum, start, size, members,
+                                  jnp.int32(base), jnp.int32(total),
+                                  chunk=chunk)
+        v = np.asarray(v)
+        assert v.sum() == live and v[:live].all() and not v[live:].any(), shard
 
 
 def test_enumerate_pairs_streams_all_slots():
