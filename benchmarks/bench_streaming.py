@@ -131,8 +131,17 @@ def run(check_speedup: bool = False, n_records: int = 100_000):
 
 
 if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.bench_streaming
-    import sys
-    n = 100_000
-    if "--records" in sys.argv:
-        n = int(sys.argv[sys.argv.index("--records") + 1])
-    run(check_speedup="--check" in sys.argv, n_records=n)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the >=5x delta-vs-full acceptance")
+    ap.add_argument("--records", type=int, default=100_000)
+    ap.add_argument("--json", nargs="?", const="BENCH_streaming.json",
+                    default=None, metavar="PATH",
+                    help="write the BENCH_streaming.json perf record")
+    args = ap.parse_args()
+    run(check_speedup=args.check, n_records=args.records)
+    if args.json:
+        from .common import write_json
+        write_json(args.json, "streaming", records=args.records)

@@ -51,6 +51,40 @@ def get_keys(name: str):
     return _cache[key]
 
 
+# rows collected by emit() for the machine-readable perf record
+_RECORDS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     """Benchmark output contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": derived})
+
+
+def write_json(path: str, bench: str, **meta):
+    """Write every emitted row so far as a BENCH_<bench>.json perf record.
+
+    The record is the CI perf-trajectory artifact: one JSON object with
+    the bench name, environment provenance, optional caller metadata,
+    and the ``emit`` rows verbatim.
+    """
+    import json
+    import platform
+
+    import jax
+
+    record = {
+        "bench": bench,
+        "unix_time": int(time.time()),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        **meta,
+        "results": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(_RECORDS)} records to {path}", flush=True)

@@ -360,14 +360,23 @@ def _make_routed_round_step(mesh, axes, n_shards: int, chunk: int, cap: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _make_local_dedupe(mesh, axes, n_rounds: int):
-    """Build the shard-local sort-dedupe over the accumulated buckets."""
+def _make_local_dedupe(mesh, axes, n_rounds: int,
+                       sort_backend: str = "comparator",
+                       n_passes: int = 16, interpret: bool = True):
+    """Build the shard-local sort-dedupe over the accumulated buckets.
+
+    ``sort_backend`` picks the in-shard sort engine (comparator
+    ``lax.sort`` vs the ``kernels/sort`` radix kernel) — part of the
+    cache key, like every other static of the compiled step.
+    """
     from ..kernels import pairs as pairs_kernels
 
     def local_dedupe(*bufs):
         hi = jnp.concatenate(bufs[:n_rounds])
         lo = jnp.concatenate(bufs[n_rounds:])
-        return pairs_kernels.dedupe_packed_device(hi, lo)
+        return pairs_kernels.dedupe_packed_device(
+            hi, lo, sort_backend=sort_backend, n_passes=n_passes,
+            use_kernel=False, interpret=interpret)
 
     specs = (P(axes),) * (2 * n_rounds)
     return jax.jit(shard_map(
@@ -396,6 +405,7 @@ def dedupe_pairs_distributed(
     blocks, mesh: Mesh, axis_names: Sequence[str] = ("data",),
     budget: int = 50_000_000, chunk_per_shard: int = 1 << 18,
     route_slack: float = 2.0, interpret: bool = True, sample_seed: int = 0,
+    sort_backend: str = "auto",
 ):
     """Fingerprint-routed distributed pair dedupe (no global sort).
 
@@ -419,6 +429,12 @@ def dedupe_pairs_distributed(
     n_shards * cap with cap = ceil(chunk/n_shards * route_slack)).
     Routing overflow beyond ``route_slack`` is detected per round and
     falls back to the single-device driver rather than dropping pairs.
+
+    ``sort_backend`` picks the shard-local dedupe sort: ``"auto"`` keeps
+    the per-platform winner (per-shard numpy u64 ``np.sort`` on the CPU
+    backend, the radix kernel on real accelerators), ``"comparator"`` /
+    ``"radix"`` force the on-device engine either way — same contract as
+    ``core.pairs.dedupe_pairs``, and still bit-identical.
     """
     from . import pairs as pairs_lib
     from ..kernels import pairs as pairs_kernels
@@ -426,6 +442,10 @@ def dedupe_pairs_distributed(
 
     axes = tuple(axis_names)
     n_shards = sharding.axis_size(mesh, axes)
+    if sort_backend not in pairs_lib._SORT_BACKENDS:
+        raise ValueError(
+            f"sort_backend must be one of {pairs_lib._SORT_BACKENDS}, "
+            f"got {sort_backend!r}")
     total = blocks.num_pair_slots
     exact = total <= budget
     # the backend-shared seeded global sample (bit-identical to every
@@ -451,7 +471,8 @@ def dedupe_pairs_distributed(
                           stacklevel=2)
         return pairs_lib.dedupe_pairs(blocks, budget=budget,
                                       sample_seed=sample_seed,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      sort_backend=sort_backend)
 
     start32 = jnp.asarray(blocks.start, jnp.int32)
     size32 = jnp.asarray(blocks.size, jnp.int32)
@@ -499,9 +520,14 @@ def dedupe_pairs_distributed(
             RepCapacityWarning, stacklevel=2)
         return pairs_lib.dedupe_pairs(blocks, budget=budget,
                                       sample_seed=sample_seed,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      sort_backend=sort_backend)
 
-    if jax.default_backend() == "cpu":
+    # routed pairs always satisfy the pack bound (contract check above),
+    # so "auto" resolves to the per-platform winner and "radix" never
+    # degrades here
+    sort_kind = pairs_lib._resolve_sort_backend(sort_backend, blocks)
+    if sort_kind == "host":
         # CPU mirror of the single-device driver's packed strategy: each
         # shard's routed bucket is sorted with numpy's u64 sort (host ==
         # device memory on CPU, and np.sort beats XLA CPU's comparator
@@ -515,7 +541,12 @@ def dedupe_pairs_distributed(
                 np.concatenate([wr[s] for wr in per_round_words]))
             for s in range(n_shards)])
     else:
-        dedupe = _make_local_dedupe(mesh, axes, len(rhi))
+        # data-dependent pass count only for the radix sort (n_passes is
+        # part of the lru_cache key; the comparator ignores it)
+        n_passes = (pairs_lib._radix_passes_for_blocks(blocks)
+                    if sort_kind == "radix" else 16)
+        dedupe = _make_local_dedupe(mesh, axes, len(rhi), sort_kind,
+                                    n_passes, interpret)
         shi, slo, winner = dedupe(*rhi, *rlo)
         w = np.asarray(winner)
         words = ((np.asarray(shi).astype(np.uint64) << np.uint64(32))
@@ -532,6 +563,7 @@ def materialize_pairs_distributed(
     budget: int = 50_000_000, chunk_per_shard: int = 1 << 18,
     interpret: bool = True, sample_seed: int = 0,
     dedupe: str = "routed", route_slack: float = 2.0,
+    sort_backend: str = "auto",
 ):
     """Shard pair-slot decoding over the mesh and dedupe the result.
 
@@ -539,13 +571,18 @@ def materialize_pairs_distributed(
     dedupe (``dedupe_pairs_distributed``); ``dedupe="global"`` keeps the
     legacy single global sort over the gathered pair buffer — retained as
     the benchmark baseline (``benchmarks/bench_pairs.py --mesh``) and for
-    A/B debugging. Both are bit-identical to the single-device engine.
+    A/B debugging. Both are bit-identical to the single-device engine,
+    and both route their dedupe sort through the shared ``sort_backend``
+    knob (``"auto"``/``"comparator"``/``"radix"``) — the global
+    baseline's one big sort is just the same abstraction over the whole
+    pair buffer instead of per-shard buckets.
     """
     if dedupe == "routed":
         return dedupe_pairs_distributed(
             blocks, mesh, axis_names, budget=budget,
             chunk_per_shard=chunk_per_shard, route_slack=route_slack,
-            interpret=interpret, sample_seed=sample_seed)
+            interpret=interpret, sample_seed=sample_seed,
+            sort_backend=sort_backend)
     if dedupe != "global":
         raise ValueError(f"dedupe must be 'routed' or 'global', got {dedupe!r}")
 
@@ -569,7 +606,8 @@ def materialize_pairs_distributed(
                           stacklevel=2)
         return pairs_lib.dedupe_pairs(blocks, budget=budget,
                                       sample_seed=sample_seed,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      sort_backend=sort_backend)
 
     cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
     start32 = jnp.asarray(blocks.start, jnp.int32)
@@ -585,9 +623,19 @@ def materialize_pairs_distributed(
         a, b, s, v = mapped(cum32, start32, size32, mem32, base, total32)
         out_a.append(np.asarray(a)); out_b.append(np.asarray(b))
         out_s.append(np.asarray(s)); out_v.append(np.asarray(v))
+    # the legacy baseline is "one big device sort": "host" (a CPU-only
+    # shortcut of the routed/single-device drivers) maps to the
+    # comparator here so the baseline stays a device sort measurement
+    sort_kind = pairs_lib._resolve_sort_backend(sort_backend, blocks)
+    if sort_kind == "host":
+        sort_kind = "comparator"
+    kw = {}
+    if sort_kind == "radix":
+        kw["n_passes"] = pairs_lib._radix_passes_for_blocks(blocks)
     sa, sb, ss, winner = pairs_kernels.dedupe_device(
         jnp.asarray(np.concatenate(out_a)), jnp.asarray(np.concatenate(out_b)),
-        jnp.asarray(np.concatenate(out_s)), jnp.asarray(np.concatenate(out_v)))
+        jnp.asarray(np.concatenate(out_s)), jnp.asarray(np.concatenate(out_v)),
+        sort_backend=sort_kind, use_kernel=False, interpret=interpret, **kw)
     w = np.asarray(winner)
     return pairs_lib.PairSet(
         a=np.asarray(sa)[w].astype(np.int64),

@@ -95,6 +95,20 @@ class BlockingResult:
     stats: List[IterationStats]
     num_records: int
 
+    @property
+    def rep_overflow_total(self) -> int:
+        """Over-sized block representatives dropped by the fixed
+        ``rep_capacity`` buffer, summed over iterations.
+
+        Nonzero means this result silently diverges from a capless run
+        (e.g. the streaming BlockStore, which has no representative
+        cap): dropped representatives never enter the survivor table, so
+        their blocks neither dedupe nor intersect. The per-iteration
+        counts are in ``stats[i].rep_overflow``; a ``RepCapacityWarning``
+        fires as the overflow happens.
+        """
+        return sum(st.rep_overflow for st in self.stats)
+
 
 # ---------------------------------------------------------------------------
 # Jitted single-device iteration

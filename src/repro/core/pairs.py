@@ -42,6 +42,19 @@ JAX path is ~5.6x faster on many-small-block layouts (the shift method's
 worst case: one pass per diagonal offset), ~5.2x on medium (16-64) and
 ~2.4-2.5x on large/zipf layouts where numpy's per-block meshgrid path is
 less penalized. Pallas interpret-mode timings are parity checks only.
+
+sort_backend (the dedupe-sort knob, threaded through every device
+dedupe call site down to ``kernels/sort``): ``"auto"`` keeps the
+per-platform winner — the packed-u64 ``np.sort`` host path on the CPU
+backend, the radix engine on real accelerators when rids fit the 62-bit
+pack; ``"comparator"`` / ``"radix"`` force XLA's ``lax.sort`` vs the
+LSB radix kernel. Measured on this CPU (``bench_pairs.py
+--sort-backend radix``, ~300k slots): host np.sort ~4-8x the
+comparator, and the comparator ~6x the jnp radix mirror — XLA CPU
+lowers the per-pass scatter sequentially, so radix only pays off where
+the comparator network's O(log^2 n) shuffle rounds dominate (TPU/GPU);
+the knob exists so hardware runs can measure exactly that crossover.
+All choices are bit-identical on every parity suite.
 """
 from __future__ import annotations
 
@@ -179,6 +192,7 @@ class PairSet:
 # ---------------------------------------------------------------------------
 
 _BACKENDS = ("auto", "numpy", "jax", "pallas", "distributed")
+_SORT_BACKENDS = ("auto", "comparator", "radix")
 # below this many pair slots, jit dispatch overhead beats the numpy loop
 # (measured crossover, see module docstring); "auto" stays host-side there
 _AUTO_NUMPY_CROSSOVER = 10_000
@@ -218,16 +232,28 @@ def _resolve_backend(backend: str, blocks: Blocks, budget: int) -> str:
 def _sample_slots(total: int, budget: int, seed: int) -> np.ndarray:
     """Deterministic uniform pair-slot sample (shared across backends).
 
-    Returns sorted distinct int64 slot indices, at most ``budget`` of
-    them. Small slot spaces use an exact permutation; large ones draw
-    with replacement and unique (a slight undershoot of ``budget``, which
-    the inexact path tolerates).
+    Returns exactly ``min(budget, total)`` sorted distinct int64 slot
+    indices, allocating O(budget) memory regardless of ``total`` (the
+    slot space reaches 68B pairs at paper scale — materializing it, as a
+    full permutation would, is off the table). Dense draws
+    (``2 * budget >= total``) permute the slot range, which is already
+    O(budget); sparse draws reject duplicates in geometrically-growing
+    with-replacement rounds and then subsample the distinct set
+    uniformly — by slot exchangeability that is an exact uniform draw
+    without replacement.
     """
     rng = np.random.default_rng(seed)
-    if total <= (1 << 24):
+    budget = max(0, min(budget, total))
+    if budget == 0:
+        return np.zeros((0,), np.int64)
+    if 2 * budget >= total:
         return np.sort(rng.permutation(total)[:budget]).astype(np.int64)
-    draws = rng.integers(0, total, size=int(budget * 1.05), dtype=np.int64)
-    uniq = np.unique(draws)
+    uniq = np.zeros((0,), np.int64)
+    while len(uniq) < budget:
+        need = budget - len(uniq)
+        draws = rng.integers(0, total, size=int(need * 1.1) + 16,
+                             dtype=np.int64)
+        uniq = np.unique(np.concatenate([uniq, draws]))
     if len(uniq) > budget:
         # subsample uniformly — truncating the SORTED uniques would
         # systematically exclude the top of the slot space
@@ -272,15 +298,54 @@ def _packable(blocks: Blocks) -> bool:
             or int(blocks.members.max()) < (1 << pairs_kernels.PACK_RID_BITS))
 
 
+def _radix_passes_for_blocks(blocks: Blocks) -> int:
+    """Static radix pass count covering this layout's packed sort words
+    (single source for every radix call site — an under-covered pass
+    count would silently mis-sort high rid bits)."""
+    return pairs_kernels.radix_passes_for(
+        int(blocks.members.max()) if len(blocks.members) else 0)
+
+
+def _resolve_sort_backend(sort_backend: str, blocks: Blocks) -> str:
+    """Map the user knob onto a concrete dedupe-sort strategy.
+
+    Returns one of "host" (packed u64 ``np.sort`` — CPU only, where host
+    memory IS device memory), "radix" (``kernels.sort`` LSB radix over
+    packed words), or "comparator" (``lax.sort``). ``"auto"`` keeps the
+    measured winner per platform: the host sort on CPU, radix on real
+    accelerators when the rids fit the 62-bit pack, comparator otherwise.
+    Forcing ``"radix"`` beyond the pack bound warns and degrades to the
+    comparator (the only order-preserving option there).
+    """
+    if sort_backend not in _SORT_BACKENDS:
+        raise ValueError(f"sort_backend must be one of {_SORT_BACKENDS}, "
+                         f"got {sort_backend!r}")
+    packable = _packable(blocks)
+    on_cpu = jax.default_backend() == "cpu"
+    if sort_backend == "auto":
+        if on_cpu and packable:
+            return "host"
+        return "radix" if packable else "comparator"
+    if sort_backend == "radix" and not packable:
+        warnings.warn(
+            "sort_backend='radix' needs rids < "
+            f"2**{pairs_kernels.PACK_RID_BITS} to pack the 62-bit sort "
+            "word; using the comparator sort", RuntimeWarning, stacklevel=4)
+        return "comparator"
+    return sort_backend
+
+
 def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
-                   chunk_pairs: int, use_kernel: bool, interpret: bool
-                   ) -> Tuple[np.ndarray, ...]:
+                   chunk_pairs: int, use_kernel: bool, interpret: bool,
+                   sort_backend: str = "auto") -> Tuple[np.ndarray, ...]:
     """Device engine: chunked slot decode + one sort-dedupe pass.
 
-    The dedupe sort runs on device (``lax.sort``) on real accelerators;
-    on the CPU backend with pack-eligible rids the words are packed on
-    device and sorted with ``np.sort`` (host == device memory there, and
-    numpy's u64 sort is ~40x faster than XLA CPU's comparator sort).
+    The dedupe sort strategy comes from ``_resolve_sort_backend``:
+    ``"auto"`` packs the words on device and sorts with ``np.sort`` on
+    the CPU backend (host == device memory there, and numpy's u64 sort
+    is ~40x faster than XLA CPU's comparator sort) and radix-sorts on
+    device elsewhere; ``"comparator"``/``"radix"`` force the device sort
+    flavor (useful to exercise and benchmark either on any platform).
     """
     start32 = jnp.asarray(blocks.start, jnp.int32)
     size32 = jnp.asarray(blocks.size, jnp.int32)
@@ -323,16 +388,25 @@ def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
     if not out_a:
         z = np.zeros((0,), np.int64)
         return z, z, z, None
-    if jax.default_backend() == "cpu" and _packable(blocks):
+    sort_kind = _resolve_sort_backend(sort_backend, blocks)
+    if sort_kind == "host":
         his, los = [], []
         for a, b, s, v in zip(out_a, out_b, out_s, out_v):
             hi, lo = pairs_kernels.pack_sort_words(a, b, s, v)
             his.append(np.asarray(hi)); los.append(np.asarray(lo))
         return pairs_kernels.dedupe_packed_host(
             np.concatenate(his), np.concatenate(los)) + (None,)
+    # n_passes is a static jit arg: derive it from the data only when the
+    # radix sort actually consumes it, so comparator graphs don't retrace
+    # as the rid span crosses digit boundaries
+    kw = {}
+    if sort_kind == "radix":
+        kw["n_passes"] = _radix_passes_for_blocks(blocks)
     sa, sb, ss, winner = pairs_kernels.dedupe_device(
         jnp.concatenate(out_a), jnp.concatenate(out_b),
-        jnp.concatenate(out_s), jnp.concatenate(out_v))
+        jnp.concatenate(out_s), jnp.concatenate(out_v),
+        sort_backend=sort_kind, use_kernel=use_kernel, interpret=interpret,
+        **kw)
     w = np.asarray(winner)
     dev = (sa[w], sb[w])  # compact on device; host copies below share it
     return (np.asarray(dev[0]).astype(np.int64),
@@ -344,7 +418,8 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
                  backend: str = "auto", chunk_pairs: int = 1 << 20,
                  sample_seed: int = 0, interpret: bool = True,
                  mesh=None, axis_names: Tuple[str, ...] = ("data",),
-                 route_slack: float = 2.0) -> PairSet:
+                 route_slack: float = 2.0,
+                 sort_backend: str = "auto") -> PairSet:
     """RemoveDupePairs: distinct (a, b), keeping the largest source block.
 
     Within ``budget`` total pair slots the result is exact; beyond it the
@@ -352,6 +427,13 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
     (``exact=False``) — counting stays exact via ``total_slots``. All
     backends produce bit-identical PairSets for the same arguments; see
     the module docstring for the backend/chunking contract.
+
+    ``sort_backend`` selects the dedupe-sort engine of the device
+    backends (``"comparator"`` = ``lax.sort``, ``"radix"`` = the
+    ``kernels/sort`` LSB radix kernel over packed words, ``"auto"`` =
+    the measured per-platform winner — see ``_resolve_sort_backend``);
+    every choice is bit-identical, only speed differs (measured
+    crossover in the module docstring). The numpy backend ignores it.
 
     ``backend="distributed"`` routes through the fingerprint-routed
     shard-local dedupe over ``mesh`` (all local devices on one "data"
@@ -361,6 +443,11 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
     stays the seeded global one, so results remain bit-identical to
     every single-device backend.
     """
+    if sort_backend not in _SORT_BACKENDS:
+        # validate eagerly: the numpy shortcut below never consults the
+        # knob, and a typo must not pass on small workloads only
+        raise ValueError(f"sort_backend must be one of {_SORT_BACKENDS}, "
+                         f"got {sort_backend!r}")
     total = blocks.num_pair_slots
     if total == 0:
         return _empty_pairset(True, total)
@@ -372,7 +459,8 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
         return dist_lib.dedupe_pairs_distributed(
             blocks, mesh, axis_names, budget=budget,
             chunk_per_shard=chunk_pairs, route_slack=route_slack,
-            interpret=interpret, sample_seed=sample_seed)
+            interpret=interpret, sample_seed=sample_seed,
+            sort_backend=sort_backend)
     exact = total <= budget
     slots = None if exact else _sample_slots(total, budget, sample_seed)
     backend = _resolve_backend(backend, blocks, budget)
@@ -382,7 +470,8 @@ def dedupe_pairs(blocks: Blocks, budget: int = 50_000_000,
     else:
         a, b, s, dev = _dedupe_device(blocks, slots, total, chunk_pairs,
                                       use_kernel=(backend == "pallas"),
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      sort_backend=sort_backend)
     return PairSet(a, b, s, exact, total,
                    device_a=None if dev is None else dev[0],
                    device_b=None if dev is None else dev[1])

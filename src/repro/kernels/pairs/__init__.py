@@ -1,7 +1,8 @@
 from .ops import (decode_chunk, decode_block_local, dedupe_device,  # noqa: F401
                   dedupe_packed_device, dedupe_packed_host, dedupe_words_host,
                   pack_sort_words,
-                  pair_route_owner, search_steps_for, tri_decode_jnp,
+                  pair_route_owner, radix_passes_for, search_steps_for,
+                  tri_decode_jnp,
                   unpack_words_host, MAX_BLOCK_N, MAX_SEARCH_STEPS,
                   PACK_RID_BITS, ROUTE_SEED)
 from .pairs import tri_decode_pallas  # noqa: F401

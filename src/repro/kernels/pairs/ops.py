@@ -22,8 +22,22 @@ work is fixed-shape:
   ``dedupe_packed_host`` sorts it as a single u64 with ``np.sort``
   (numpy's radix-ish sort beats XLA CPU's comparator sort ~40x, and on
   CPU host==device memory so there is no transfer) while
-  ``dedupe_device`` keeps everything in ``lax.sort`` for real
-  accelerators. Both produce identical winners.
+  ``dedupe_packed_device`` / ``dedupe_device`` sort on device for real
+  accelerators. All produce identical winners.
+
+sort_backend contract: the on-device sort behind ``dedupe_device`` and
+``dedupe_packed_device`` is selected by ``sort_backend`` —
+``"comparator"`` is XLA's ``lax.sort`` (2-key over the packed limbs, or
+the general-rid 3-key form), ``"radix"`` is the ``kernels.sort`` LSB
+radix engine over the packed words (requires rids < 2**PACK_RID_BITS;
+``radix_passes_for`` bounds the static pass count from the max rid, so
+small keyspaces skip their constant high digits). Both orders are
+bit-identical; the host driver in core/pairs.py resolves ``"auto"`` per
+device backend and enforces the pack bound. Measured crossover on this
+CPU container (~300k slots): comparator ~6x the jnp radix mirror (XLA
+CPU serializes the per-pass scatter), so "auto" never picks radix on
+CPU — the kernel targets accelerators, where the comparator's
+O(log^2 n) cross-lane rounds are the documented bottleneck.
 
 int32 contract (x64 stays off — see core/u64.py): record ids and the
 materialized slot range must be < 2**31, block sizes <= MAX_BLOCK_N; the
@@ -42,6 +56,7 @@ import numpy as np
 
 from .pairs import (tri_decode_pallas, search_steps_for,  # noqa: F401
                     MAX_BLOCK_N, MAX_SEARCH_STEPS)
+from ..sort import ops as sort_ops
 
 _INT32_MAX = 2**31 - 1
 _LANES = 128
@@ -210,17 +225,37 @@ def pair_route_owner(a: jnp.ndarray, b: jnp.ndarray, valid: jnp.ndarray,
     return jnp.where(valid, owner, jnp.int32(n_shards))
 
 
-def dedupe_packed_device(hi: jnp.ndarray, lo: jnp.ndarray):
-    """Shard-local dedupe of packed sort words: 2-key sort + winner mask.
+def radix_passes_for(max_rid: int) -> int:
+    """Static radix pass count covering the 62-bit word for rids <= max_rid.
+
+    The word's topmost varying bit is ``39 + bitlength(max a)`` (the
+    a-field starts at bit 39); digits above it are constant zero on valid
+    words and all-ones on the sentinel, which still sorts last (see
+    ``kernels.sort.ops``). Clamped to at least the 16 size bits.
+    """
+    bits = _PACK_SIZE_BITS + PACK_RID_BITS + max(1, int(max_rid).bit_length())
+    n = -(-bits // sort_ops.RADIX_BITS)
+    return max(sort_ops.MIN_PASSES, min(sort_ops.MAX_PASSES, n))
+
+
+def dedupe_packed_device(hi: jnp.ndarray, lo: jnp.ndarray,
+                         sort_backend: str = "comparator",
+                         n_passes: int = sort_ops.MAX_PASSES,
+                         use_kernel: bool = False, interpret: bool = True):
+    """Shard-local dedupe of packed sort words: one sort + winner mask.
 
     The device mirror of ``dedupe_packed_host`` for use INSIDE shard_map
     (jit-free so it inherits the caller's tracing): sorts the uint32 limb
-    pair lexicographically — identical order to the u64 word — and marks
-    the first element of each (a, b) run. Sentinel (all-ones) lanes sort
-    to the tail and are never winners. Returns (hi_sorted, lo_sorted,
+    pair via ``kernels.sort.sort_words`` (``sort_backend="comparator"``
+    is the 2-key ``lax.sort``, ``"radix"`` the LSB radix engine —
+    identical order to the u64 word either way) and marks the first
+    element of each (a, b) run. Sentinel (all-ones) lanes sort to the
+    tail and are never winners. Returns (hi_sorted, lo_sorted,
     winner_mask).
     """
-    shi, slo = jax.lax.sort((hi, lo), num_keys=2)
+    shi, slo = sort_ops.sort_words(hi, lo, backend=sort_backend,
+                                   n_passes=n_passes, use_kernel=use_kernel,
+                                   interpret=interpret)
     # run id = word >> 16 == (a << 23) | b: equal iff hi AND lo>>16 match
     srun = slo >> 16
     live = ~((shi == jnp.uint32(0xFFFFFFFF)) & (slo == jnp.uint32(0xFFFFFFFF)))
@@ -238,16 +273,34 @@ def unpack_words_host(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray
     return a, b, s
 
 
-@jax.jit
+@functools.partial(
+    jax.jit, static_argnames=("sort_backend", "n_passes", "use_kernel",
+                              "interpret"))
 def dedupe_device(a: jnp.ndarray, b: jnp.ndarray, src_size: jnp.ndarray,
-                  valid: jnp.ndarray):
+                  valid: jnp.ndarray, *, sort_backend: str = "comparator",
+                  n_passes: int = sort_ops.MAX_PASSES,
+                  use_kernel: bool = False, interpret: bool = True):
     """Device sort (a, b, size desc); mark each pair's largest-block winner.
 
-    General-rid path (no PACK_RID_BITS bound): a 3-key ``lax.sort``.
+    ``sort_backend="comparator"`` is the general-rid path (no
+    PACK_RID_BITS bound): a 3-key ``lax.sort``. ``"radix"`` re-expresses
+    the same order over the packed 62-bit sort words and runs the
+    ``kernels.sort`` radix engine (caller must guarantee rids <
+    2**PACK_RID_BITS — the core/pairs.py driver checks ``_packable``).
     Returns (a_sorted, b_sorted, size_sorted, winner_mask); invalid lanes
-    carry (INT32_MAX, INT32_MAX) keys, sort to the tail, and are never
-    winners. Host compacts by the mask.
+    sort to the tail and are never winners. Host compacts by the mask.
     """
+    if sort_backend == "radix":
+        hi, lo = pack_sort_words(a, b, src_size, valid)
+        shi, slo, winner = dedupe_packed_device(
+            hi, lo, sort_backend="radix", n_passes=n_passes,
+            use_kernel=use_kernel, interpret=interpret)
+        # unpack the winner words back to int32 triplets on device
+        ua = (shi >> 7).astype(jnp.int32)
+        ub = (((shi & jnp.uint32(0x7F)) << 16) | (slo >> 16)).astype(jnp.int32)
+        us = (jnp.uint32(_SIZE_MASK) - (slo & jnp.uint32(_SIZE_MASK))
+              ).astype(jnp.int32)
+        return ua, ub, us, winner
     av = jnp.where(valid, a, _INT32_MAX)
     bv = jnp.where(valid, b, _INT32_MAX)
     skey = _INT32_MAX - jnp.where(valid, src_size, 0)  # ascending = size desc

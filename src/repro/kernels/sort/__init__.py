@@ -1,0 +1,5 @@
+from .ops import (MIN_PASSES, SORT_BACKENDS, radix_sort_words,  # noqa: F401
+                  sort_words)
+from .sort import (MAX_PASSES, RADIX, RADIX_BITS, digit_of,  # noqa: F401
+                   radix_pass_pallas)
+from .ref import np_radix_sort_words  # noqa: F401

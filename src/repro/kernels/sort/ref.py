@@ -1,0 +1,31 @@
+"""Pure-numpy oracle for the LSB radix sort over u64 sort words.
+
+Deliberately the same *algorithm* (per-digit stable counting passes) but
+an independent *implementation* (numpy stable argsort per digit), so the
+device backends' histogram/rank/scatter plumbing is tested against both
+this oracle and ``np.sort`` — a sorted multiset is unique, so all three
+must agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .sort import MAX_PASSES, RADIX_BITS
+
+
+def np_radix_sort_words(w: np.ndarray, n_passes: int = MAX_PASSES
+                        ) -> np.ndarray:
+    """LSB radix sort of u64 words, ``RADIX_BITS`` bits per stable pass.
+
+    ``n_passes`` truncation matches the device contract: digits at and
+    above ``n_passes * RADIX_BITS`` are never compared, so the result is
+    fully sorted only when those bits are constant across valid words
+    (the sentinel's high digits are all-ones and still sort last, see
+    ``ops`` module docstring).
+    """
+    w = np.asarray(w, np.uint64)
+    mask = np.uint64((1 << RADIX_BITS) - 1)
+    for p in range(int(n_passes)):
+        digit = (w >> np.uint64(p * RADIX_BITS)) & mask
+        w = w[np.argsort(digit, kind="stable")]
+    return w

@@ -108,14 +108,25 @@ class QueryResult:
     candidates: np.ndarray   # (C,) distinct candidate rids, sorted
     n_blocks_hit: int        # accepted store blocks the probe matched
     levels_walked: int
+    # sizes of the matched accepted blocks, sorted ascending; under
+    # ``include_probe`` these count the probe itself (size + 1)
+    block_sizes: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
 
 
 class DeltaBlocker:
-    """Runs the incremental iteration loop against one BlockStore."""
+    """Runs the incremental iteration loop against one BlockStore.
 
-    def __init__(self, store: BlockStore):
+    ``sort_backend`` threads into every pair-ledger sync's
+    ``pairs.dedupe_pairs`` call (the "auto"/"comparator"/"radix" dedupe-
+    sort knob of the pair engine); results are bit-identical across
+    choices, only the sync's sort speed differs.
+    """
+
+    def __init__(self, store: BlockStore, sort_backend: str = "auto"):
         self.store = store
         self.cfg = store.cfg
+        self.sort_backend = sort_backend
 
     # ------------------------------------------------------------------
     # ingest
@@ -483,7 +494,8 @@ class DeltaBlocker:
             if blk.num_blocks == 0:
                 return (np.zeros((0,), np.uint64), np.zeros((0,), np.int64))
             total = blk.num_pair_slots
-            ps = pairs_mod.dedupe_pairs(blk, budget=total + 1, backend="auto")
+            ps = pairs_mod.dedupe_pairs(blk, budget=total + 1, backend="auto",
+                                        sort_backend=self.sort_backend)
             return pack_pair(ps.a, ps.b), ps.src_size
 
         join_pack, _ = pair_set(shrink_old_csr)   # may have LOST a source
@@ -590,15 +602,59 @@ class DeltaBlocker:
     # query
     # ------------------------------------------------------------------
 
-    def query_keys(self, keys_packed, valid) -> List[QueryResult]:
+    @staticmethod
+    def _probe_self_survivors(k64, valid, cnt_adj, fp, max_block_size):
+        """Survivor mask of each probe row's post-probe over-sized keys.
+
+        With the probe counted in, a held block's membership fingerprint
+        becomes ``fp ^ probe_fp`` and its size ``cnt + 1`` — a uniform
+        shift, so the only duplicate groups that remain among one row's
+        held keys are those sharing the ORIGINAL store (fp, cnt) (an
+        adjusted block colliding with an unrelated store block would need
+        a 64-bit fingerprint coincidence, the same odds the batch path
+        accepts). The smallest key of each group survives, mirroring
+        ``hdb.dedupe_oversized_reps``.
+        """
+        surv = np.zeros(valid.shape, bool)
+        q, k = valid.shape
+        flat = np.flatnonzero(((cnt_adj > max_block_size) & valid).reshape(-1))
+        if len(flat) == 0:
+            return surv
+        row = flat // k
+        fpv = fp.reshape(-1)[flat]
+        cntv = cnt_adj.reshape(-1)[flat]
+        keyv = k64.reshape(-1)[flat]
+        order = np.lexsort((keyv, cntv, fpv, row))
+        r_s, f_s, c_s = row[order], fpv[order], cntv[order]
+        first = np.concatenate([[True], (r_s[1:] != r_s[:-1])
+                                | (f_s[1:] != f_s[:-1])
+                                | (c_s[1:] != c_s[:-1])])
+        surv.reshape(-1)[flat[order[first]]] = True
+        return surv
+
+    def query_keys(self, keys_packed, valid,
+                   include_probe: bool = False) -> List[QueryResult]:
         """Candidate ids per probe record (serving-style, read-only).
 
         Walks the store's levels with the probe's key matrix: accepted
         probe keys contribute the matching stored block's members; keys
         landing on surviving over-sized blocks are pairwise-intersected
-        (same jitted ``intersect_keys``) and the walk descends. The
-        probe's own (absent) contribution to counts is NOT simulated —
-        a query never mutates the store.
+        (same jitted ``intersect_keys``) and the walk descends. A query
+        never mutates the store.
+
+        ``include_probe=False`` keeps the historical behavior: the
+        probe's own (absent) +1 on matched block sizes is NOT simulated.
+        ``include_probe=True`` replays the walk as if the probe had been
+        ingested (each probe independently): CMS estimates gain the
+        probe's exact per-bucket self-contribution, exact counts gain +1
+        on held keys, over-sized duplicate-block survivorship is
+        re-derived for the post-probe fingerprints, and the descent's
+        ``psize`` carries the adjusted sizes — so the decisions (and the
+        ``block_sizes`` stats) match what ingesting the probe would
+        decide for it, as long as the probe does not tip an UNRELATED
+        store block across ``max_block_size`` (that cascade re-blocks
+        other records' state, which a read-only walk cannot see; the
+        streaming oracle test pins the non-tipping case exactly).
         """
         cfg = self.cfg
         keys = np.array(np.asarray(keys_packed), np.uint32, copy=True)
@@ -608,6 +664,8 @@ class DeltaBlocker:
         psize = np.full(valid.shape, INT32_MAX, np.int32)
         cand_probe: List[np.ndarray] = []
         cand_rid: List[np.ndarray] = []
+        size_probe: List[np.ndarray] = []
+        size_val: List[np.ndarray] = []
         hits = np.zeros(q, np.int64)
         levels_walked = 0
         for lev in range(cfg.max_iterations):
@@ -619,9 +677,17 @@ class DeltaBlocker:
             levels_walked += 1
             k64 = pack_key64(keys)
             idx = sketches.np_cms_indices(cfg.cms, k64)
-            est = state.cms[0][idx[0]]
-            for j in range(1, cfg.cms_depth):
-                np.minimum(est, state.cms[j][idx[j]], out=est)
+            est = None
+            for j in range(cfg.cms_depth):
+                e = state.cms[j][idx[j]].astype(np.int64)
+                if include_probe:
+                    # the probe's own fold-in: +1 per probe entry landing
+                    # in the bucket (exact, incl. self-collisions)
+                    same = ((idx[j][:, :, None] == idx[j][:, None, :])
+                            & valid[:, None, :])
+                    e = e + same.sum(axis=2)
+                est = e if est is None else np.minimum(est, e)
+            est = est.astype(np.int32)
             p = _pow2(q * keys.shape[1], floor=64)
             est_p = np.zeros(p, np.int32)
             val_p = np.zeros(p, bool)
@@ -636,10 +702,17 @@ class DeltaBlocker:
             right = np.asarray(right)[:m].reshape(valid.shape)
             keepb = np.asarray(keepb)[:m].reshape(valid.shape)
             cnt, surv, _ = state.lookup(k64)
+            if include_probe:
+                cnt = cnt + valid.astype(cnt.dtype)
+                surv = self._probe_self_survivors(
+                    k64, valid, cnt, state.lookup_fp(k64),
+                    cfg.max_block_size)
             accept = right | (keepb & (cnt <= cfg.max_block_size))
             survive = keepb & (cnt > cfg.max_block_size) & surv
             size = np.where(keepb, cnt, 0).astype(np.int32)
-            # collect members of matching accepted blocks
+            # collect members (and sizes) of matching accepted blocks; the
+            # stat size comes from the accepted-blocks CSR (the key table
+            # never sees CMS-accepted keys), +1 when the probe counts
             hit_keys = k64[accept]
             if len(hit_keys):
                 probe_of = np.broadcast_to(
@@ -650,6 +723,9 @@ class DeltaBlocker:
                         hits[pi] += 1
                         cand_probe.append(np.full(len(mem), pi))
                         cand_rid.append(mem)
+                        size_probe.append(np.asarray([pi]))
+                        size_val.append(np.asarray(
+                            [len(mem) + int(include_probe)], np.int64))
             if not survive.any():
                 break
             ko = min(cfg.max_oversize_keys, keys.shape[1])
@@ -674,13 +750,18 @@ class DeltaBlocker:
         if cand_probe:
             cp = np.concatenate(cand_probe)
             cr = np.concatenate(cand_rid)
+            sp = np.concatenate(size_probe)
+            sv = np.concatenate(size_val)
         else:
             cp = np.zeros((0,), np.int64)
             cr = np.zeros((0,), np.int64)
+            sp = np.zeros((0,), np.int64)
+            sv = np.zeros((0,), np.int64)
         out = []
         for pi in range(q):
             out.append(QueryResult(
                 candidates=np.unique(cr[cp == pi]),
                 n_blocks_hit=int(hits[pi]),
-                levels_walked=levels_walked))
+                levels_walked=levels_walked,
+                block_sizes=np.sort(sv[sp == pi])))
         return out

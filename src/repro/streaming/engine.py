@@ -132,10 +132,11 @@ class StreamingEngine:
     def __init__(self, blocking: Dict[str, blocks_mod.ColumnBlocking],
                  cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(),
                  ingest_slots: int = 256, query_slots: int = 64,
-                 matcher_cfg=None):
+                 matcher_cfg=None, sort_backend: str = "auto"):
         self.blocking = blocking
         self.store = BlockStore(cfg)
-        self.blocker = DeltaBlocker(self.store)
+        # sort_backend: pair-engine dedupe-sort knob for ledger syncs
+        self.blocker = DeltaBlocker(self.store, sort_backend=sort_backend)
         self.ingest_slots = ingest_slots
         self.query_slots = query_slots
         self.matcher_cfg = matcher_cfg

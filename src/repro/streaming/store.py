@@ -279,6 +279,15 @@ class LevelState:
                 surv.reshape(key64.shape),
                 found.reshape(key64.shape))
 
+    def lookup_fp(self, key64: np.ndarray) -> np.ndarray:
+        """Membership XOR-fingerprint per query key (0 if absent)."""
+        if len(self.tab_key) == 0:
+            return np.zeros(key64.shape, np.uint64)
+        pos, found = searchsorted_mask(self.tab_key, key64.reshape(-1))
+        safe = np.minimum(pos, len(self.tab_key) - 1)
+        return np.where(found, self.tab_fp[safe],
+                        np.uint64(0)).reshape(key64.shape)
+
 
 class BlockStore:
     """Persistent blocking state for streaming ingest + candidate queries."""

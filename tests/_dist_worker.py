@@ -39,6 +39,13 @@ def check_routed_pair_dedupe(mesh_kind, mesh, axes, ref):
     assert_pairsets_equal(got, want, f"routed-exact {mesh_kind}")
     assert len(want.a) > 100, "blocking produced too few pairs to be a real test"
 
+    # the radix shard-local dedupe sort must be bit-identical on the
+    # emulated mesh (forces the device path — "auto" is the numpy u64
+    # sort on this CPU backend)
+    got_r = distributed.dedupe_pairs_distributed(
+        blk, mesh, axes, chunk_per_shard=4096, sort_backend="radix")
+    assert_pairsets_equal(got_r, want, f"routed-radix {mesh_kind}")
+
     budget = blk.num_pair_slots // 3
     want_s = pairs.dedupe_pairs(blk, budget=budget, backend="numpy",
                                 sample_seed=13)

@@ -105,6 +105,38 @@ def test_duplicate_blocks_are_deduped():
     assert len(res.rids) == 0
 
 
+def test_rep_capacity_overflow_is_warned_and_counted():
+    """A tiny ``rep_capacity`` drops over-sized block representatives —
+    a silent divergence from the capless streaming store unless surfaced:
+    the run must emit RepCapacityWarning AND report the dropped count in
+    ``BlockingResult.rep_overflow_total``."""
+    n, m = 160, 16      # two 16-way partitions: 32 over-sized 10-blocks
+    va = (np.arange(n, dtype=np.uint32) % m)
+    vb = (np.arange(n, dtype=np.uint32) // (n // m))
+    cols = {
+        "a": TokenColumn(jnp.asarray(va[:, None]), jnp.ones((n, 1), bool)),
+        "b": TokenColumn(jnp.asarray(vb[:, None]), jnp.ones((n, 1), bool)),
+    }
+    spec = {k: ColumnBlocking.identity() for k in cols}
+    keys, valid = blocks.build_keys(cols, spec)
+    cfg_small = hdb.HDBConfig(max_block_size=5, max_iterations=2,
+                              rep_capacity=4)
+    with pytest.warns(hdb.RepCapacityWarning):
+        res = hdb.hashed_dynamic_blocking(keys, valid, cfg_small)
+    # iteration 0 found 2*m over-sized representatives, capacity 4
+    assert res.stats[0].rep_overflow == 2 * m - 4
+    assert res.rep_overflow_total >= 2 * m - 4
+    # a capacious run keeps every representative and reports zero
+    cfg_big = hdb.HDBConfig(max_block_size=5, max_iterations=2,
+                            rep_capacity=1 << 10)
+    res_big = hdb.hashed_dynamic_blocking(keys, valid, cfg_big)
+    assert res_big.rep_overflow_total == 0
+    # the count quantifies the divergence: dropped reps' blocks vanish
+    # from the survivor set instead of surviving to intersection
+    assert res.stats[0].n_surviving_oversized == 4
+    assert res_big.stats[0].n_surviving_oversized == 2 * m
+
+
 def test_progress_heuristic_terminates():
     """Blocks too similar to parents are discarded (MAX_SIMILARITY)."""
     n = 500

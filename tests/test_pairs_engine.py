@@ -83,6 +83,31 @@ def test_backends_agree_sampling_fallback(seed):
         _assert_pairsets_equal(got, want, f"backend={be} seed={seed}")
 
 
+def test_sample_slots_budget_bounded_allocation_and_determinism():
+    """_sample_slots must draw exactly min(budget, total) distinct slots
+    in O(budget) memory — the old permutation branch materialized and
+    shuffled slot spaces up to 2**24 (~128 MiB) for any budget."""
+    import tracemalloc
+
+    total, budget = 1 << 24, 1024
+    tracemalloc.start()
+    s1 = pairs._sample_slots(total, budget, seed=42)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # old code: >= 128 MiB int64 permutation; new bound is O(budget)
+    assert peak < 4 << 20, f"peak allocation {peak} bytes is not O(budget)"
+    assert len(s1) == budget
+    assert np.all(np.diff(s1) > 0) and 0 <= s1[0] and s1[-1] < total
+    # deterministic per seed, sensitive to it
+    np.testing.assert_array_equal(s1, pairs._sample_slots(total, budget, 42))
+    assert not np.array_equal(s1, pairs._sample_slots(total, budget, 43))
+    # dense draws still return exactly budget distinct slots
+    s2 = pairs._sample_slots(100, 90, seed=0)
+    assert len(s2) == 90 and len(np.unique(s2)) == 90
+    assert len(pairs._sample_slots(100, 200, seed=0)) == 100
+    assert len(pairs._sample_slots(100, 0, seed=0)) == 0
+
+
 def test_sampling_is_deterministic_and_seed_sensitive():
     blk = _random_blocks(0, 30, 40, universe=300)
     budget = blk.num_pair_slots // 4

@@ -151,6 +151,70 @@ def test_query_returns_block_mates():
     assert store.memory_stats() == before
 
 
+def _probe_oracle(store, rid):
+    """Post-ingest truth for one probe record: (co-member set, sizes of
+    its accepted blocks that contain at least one other record)."""
+    gb = store.accepted_blocks(min_size=1)
+    mates, sizes = set(), []
+    for bi in range(gb.num_blocks):
+        mem = gb.members[gb.start[bi]:gb.start[bi] + gb.size[bi]]
+        if rid in mem and len(mem) > 1:
+            mates.update(int(m) for m in mem if m != rid)
+            sizes.append(len(mem))
+    return mates, sorted(sizes)
+
+
+def _assignment_set(store, drop_rid=None):
+    gb = store.accepted_blocks(min_size=1)
+    out = set()
+    for bi in range(gb.num_blocks):
+        for m in gb.members[gb.start[bi]:gb.start[bi] + gb.size[bi]]:
+            if m != drop_rid:
+                out.add((int(gb.key_hi[bi]), int(gb.key_lo[bi]), int(m)))
+    return out
+
+
+def test_query_include_probe_matches_ingest_oracle():
+    """include_probe=True must replay the walk AS IF the probe had been
+    ingested: candidates == the probe's post-ingest co-members, and
+    block_sizes == its accepted blocks' post-ingest sizes (probe
+    counted). Exact whenever ingesting the probe would not re-block any
+    OTHER record (the documented cascade caveat — tipping a shared block
+    across max_block_size, or a CMS collision flipping a borderline
+    estimate); cascading layouts are detected via the oracle store and
+    skipped, and at least one clean layout must be verified."""
+    cfg = hdb.HDBConfig(max_block_size=8, max_iterations=5,
+                        max_oversize_keys=6, cms_width=1 << 16)
+    checked = 0
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        keys, valid = _random_keys(rng, n=121, k=6, card=18)
+        base_k, base_v = keys[:-1], valid[:-1]
+        store, _ = _ingest_in_parts(base_k, base_v, cfg, 2, rng)
+        # oracle: really ingest the probe into an identical second store
+        store2, _ = _ingest_in_parts(base_k, base_v, cfg, 1, rng)
+        DeltaBlocker(store2).ingest_keys(keys[-1:], valid[-1:])
+        rid = len(base_k)
+        if _assignment_set(store) != _assignment_set(store2, drop_rid=rid):
+            continue  # probe cascaded into other records: caveat applies
+        blocker = DeltaBlocker(store)
+        res = blocker.query_keys(keys[-1:], valid[-1:],
+                                 include_probe=True)[0]
+        res_plain = blocker.query_keys(keys[-1:], valid[-1:])[0]
+        mates, sizes = _probe_oracle(store2, rid=rid)
+        assert set(res.candidates.tolist()) == mates, seed
+        assert list(res.block_sizes) == sizes, seed
+        assert len(sizes) > 0, seed  # must actually produce matches
+        # the flag's whole point: sizes now count the probe itself
+        if res_plain.n_blocks_hit == res.n_blocks_hit:
+            np.testing.assert_array_equal(res_plain.block_sizes + 1,
+                                          res.block_sizes)
+        checked += 1
+        if checked >= 3:
+            break
+    assert checked >= 1, "every layout cascaded; test exercised nothing"
+
+
 # ---------------------------------------------------------------------------
 # record-level service front-end
 # ---------------------------------------------------------------------------
