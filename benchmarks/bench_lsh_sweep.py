@@ -2,9 +2,7 @@
 blocking reference point)."""
 from __future__ import annotations
 
-import dataclasses
 
-import jax.numpy as jnp
 
 from .common import emit, get_corpus, timed
 

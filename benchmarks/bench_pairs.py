@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from .common import emit
+from .common import emit, sync
 
 from repro.core import pairs
 
@@ -55,8 +55,8 @@ def _time_backend(blk: pairs.Blocks, backend: str, iters: int = 3,
                        sort_backend=sort_backend)  # warm / compile
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = pairs.dedupe_pairs(blk, backend=backend,
-                                 sort_backend=sort_backend)
+        out = sync(pairs.dedupe_pairs(blk, backend=backend,
+                                      sort_backend=sort_backend))
     dt = (time.perf_counter() - t0) / iters
     assert out.exact
     return dt
@@ -156,7 +156,8 @@ def run_mesh(target_slots: int = 1_200_000,
             best = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
-                results[mode] = materialize_pairs_distributed(blk, mesh, **kw)
+                results[mode] = sync(
+                    materialize_pairs_distributed(blk, mesh, **kw))
                 best = min(best, time.perf_counter() - t0)
             times[mode] = best
         # bit-identical contract between the two dedupe modes

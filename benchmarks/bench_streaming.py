@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from .common import emit
+from .common import emit, sync
 
 from repro.core import blocks as blocks_mod
 from repro.core import hdb, pairs
@@ -46,7 +46,7 @@ def _full_reblock(keys, valid, cfg):
     res = hdb.hashed_dynamic_blocking(jnp.asarray(keys), jnp.asarray(valid),
                                       cfg)
     blk = pairs.build_blocks(res)
-    return pairs.dedupe_pairs(blk, budget=max(blk.num_pair_slots, 1) + 1)
+    return sync(pairs.dedupe_pairs(blk, budget=max(blk.num_pair_slots, 1) + 1))
 
 
 def bench_delta_vs_full(n_records: int = 100_000, delta_frac: float = 0.01,
@@ -64,7 +64,7 @@ def bench_delta_vs_full(n_records: int = 100_000, delta_frac: float = 0.01,
     store = BlockStore(cfg)
     blocker = DeltaBlocker(store)
     t0 = time.perf_counter()
-    blocker.ingest_keys(base_k, base_v)
+    sync(blocker.ingest_keys(base_k, base_v))
     t_base = time.perf_counter() - t0
     print(f"# base store: {n_records} records, "
           f"{len(store.led_pack)} candidate pairs, built in {t_base:.2f}s")
@@ -74,13 +74,13 @@ def bench_delta_vs_full(n_records: int = 100_000, delta_frac: float = 0.01,
     # --- batch: warm the compile cache, then time the union re-block ---
     _full_reblock(base_k[:4096], base_v[:4096], cfg)
     t0 = time.perf_counter()
-    full = _full_reblock(keys, valid, cfg)
+    full = sync(_full_reblock(keys, valid, cfg))
     t_full = time.perf_counter() - t0
 
     # --- streaming: time the steady-state 1% delta ingest ---
     t0 = time.perf_counter()
-    report = blocker.ingest_keys(keys[n_records + n_delta:],
-                                 valid[n_records + n_delta:])
+    report = sync(blocker.ingest_keys(keys[n_records + n_delta:],
+                                      valid[n_records + n_delta:]))
     t_delta = time.perf_counter() - t0
 
     want_pack = ((full.a.astype(np.uint64) << np.uint64(32))
@@ -117,7 +117,7 @@ def bench_ingest_throughput(n_records: int = 20_000, seed: int = 1):
         blocker.ingest_keys(keys[:mb], valid[:mb])
         t0 = time.perf_counter()
         for off in range(mb, n_records, mb):
-            blocker.ingest_keys(keys[off:off + mb], valid[off:off + mb])
+            sync(blocker.ingest_keys(keys[off:off + mb], valid[off:off + mb]))
         dt = time.perf_counter() - t0
         rate = (n_records - mb) / dt
         emit(f"streaming/ingest_mb{mb}", dt * 1e6 / max(n_records - mb, 1),

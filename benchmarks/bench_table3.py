@@ -1,7 +1,7 @@
 """Paper Table 3: pairs produced by Naive / THR / PMB / HDB."""
 from __future__ import annotations
 
-from .common import emit, get_corpus, get_keys, timed
+from .common import emit, get_corpus, get_keys
 
 from repro.core import baselines, hdb, metablocking, pairs as pairs_mod
 
@@ -10,7 +10,6 @@ def run(datasets=("SYN10K", "VOTERSYN", "SYN100K"), max_block_size=200):
     print("# table3: dataset,naive,thr,pmb,hdb (distinct pairs)")
     out = []
     for ds in datasets:
-        corpus = get_corpus(ds)
         keys, valid = get_keys(ds)
         naive = baselines.naive_pair_count(keys, valid)
         thr = baselines.threshold_blocking(keys, valid, max_block_size)

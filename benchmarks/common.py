@@ -7,15 +7,35 @@ from typing import Callable, Dict
 
 sys.path.insert(0, "src")
 
-import numpy as np
 
 from repro.core import blocks
 from repro.data import synthetic
 
 
+def sync(out):
+    """Block until every jax array reachable in ``out`` is computed.
+
+    JAX dispatch is async: stopping a clock without this measures enqueue
+    time, not execution (repro.analysis rule R004). Accepts any pytree
+    and unwraps one level of dataclass (PairSet, IngestReport, ...) so
+    device-resident fields like ``PairSet.device_a`` are awaited too.
+    Host numpy leaves pass through untouched.
+    """
+    import dataclasses
+
+    import jax
+
+    tree = out
+    if dataclasses.is_dataclass(out) and not isinstance(out, type):
+        tree = [getattr(out, f.name) for f in dataclasses.fields(out)
+                if not dataclasses.is_dataclass(getattr(out, f.name))]
+    jax.block_until_ready(tree)
+    return out
+
+
 def timed(fn: Callable, *args, **kw):
     t0 = time.perf_counter()
-    out = fn(*args, **kw)
+    out = sync(fn(*args, **kw))
     return out, time.perf_counter() - t0
 
 

@@ -56,15 +56,15 @@ def table(rows, mesh="single"):
     lines = [hdr, "|" + "---|" * 9]
     for r in rows:
         if not r.get("ok"):
-            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | FAIL | - | - | {r.get('error','')[:40]} |")
+            err = r.get("error", "")[:40]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | FAIL | - | - | {err} |")
             continue
         roof = r["roofline"]
         mf = model_flops(r["arch"], r["shape"])
         hlo_global = roof["flops_per_device"] * roof["chips"]
         ratio = mf / hlo_global if hlo_global else 0.0
         mem = r["memory"]
-        hbm = (mem.get("argument_size_in_bytes") or 0) / roof["chips"] \
-            + (mem.get("temp_size_in_bytes") or 0)
         # argument_size is already per-device on SPMD CPU? record raw temp
         hbm_gb = ((mem.get("temp_size_in_bytes") or 0)
                   + (mem.get("argument_size_in_bytes") or 0)) / 1e9

@@ -1,7 +1,48 @@
 import os
 import sys
 
+import pytest
+
 # Make `import repro` work regardless of how pytest is invoked, and make
 # test-local helpers (tests/_propcheck.py) importable from any rootdir.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+
+# Hot-path test modules that must hold the no-implicit-transfer contract
+# (the dynamic counterpart of repro.analysis rule R001): under
+# ``--transfer-guard`` these run inside jax.transfer_guard("disallow"),
+# which rejects implicit host<->device transfers — numpy arrays passed
+# straight into jitted functions, float()/.item()/bool() on device
+# arrays — while still allowing the explicit jnp.asarray/np.asarray/
+# device_get conversions the drivers are built around.
+TRANSFER_GUARDED_MODULES = {
+    "test_pairs_engine",
+    "test_sort_radix",
+    "test_streaming",
+}
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--transfer-guard",
+        action="store_true",
+        default=False,
+        help="run the hot-path test modules (pairs/sort/streaming) under "
+        "jax.transfer_guard('disallow') so implicit host transfers fail",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _transfer_guard(request):
+    module = getattr(request, "module", None)
+    if (
+        not request.config.getoption("--transfer-guard")
+        or module is None
+        or module.__name__.split(".")[-1] not in TRANSFER_GUARDED_MODULES
+    ):
+        yield
+        return
+    import jax
+
+    with jax.transfer_guard("disallow"):
+        yield

@@ -11,7 +11,6 @@ straggler monitor -> preemption handler.
 """
 import argparse
 import dataclasses
-import os
 import sys
 import time
 

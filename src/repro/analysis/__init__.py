@@ -1,0 +1,15 @@
+"""repro.analysis: JAX/Pallas static-analysis pass for this codebase.
+
+``python -m repro.analysis src benchmarks`` runs the R001-R005 rule pack
+(transfer sanitizer + dtype-contract lint) and exits nonzero on any
+unsuppressed finding. See docs/ANALYSIS.md.
+"""
+from .engine import (  # noqa: F401
+    Finding,
+    ModuleContext,
+    all_rules,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    run_cli,
+)

@@ -1,0 +1,7 @@
+"""CLI entry point: ``python -m repro.analysis PATH...``."""
+import sys
+
+from .engine import run_cli
+
+if __name__ == "__main__":
+    sys.exit(run_cli())

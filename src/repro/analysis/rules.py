@@ -1,0 +1,570 @@
+"""The R001-R005 rule pack over ``ModuleContext``.
+
+Each rule is a registered ``ModuleContext -> [Finding]`` function.
+Detection is a per-file static approximation tuned to this codebase's
+idioms (see docs/ANALYSIS.md for each rule's exact contract and how to
+suppress with ``# repro: noqa[RULE]``):
+
+- R001 host-transfer-in-jit: host calls (``np.*``, ``float``/``int``/
+  ``bool``, ``.item()``/``.tolist()``, ``jax.device_get``) applied to
+  *traced* values inside jit/pallas/shard_map-reachable functions.
+- R002 dtype-contract drift: uint64 packed-word arithmetic with untyped
+  int literals (NumPy 1.x value-based casting promotes through int64 to
+  float64 — silent precision loss past 2**53, i.e. every 62-bit sort
+  word), uint64 x int64 mixes (float64 even under NEP 50), narrowing
+  casts straight off a uint64 word without an explicit mask/shift, and
+  ``jnp.uint64``/``jnp.int64`` references (x64 is off: they are silently
+  32-bit — core/u64.py exists precisely because of this).
+- R003 tracer control flow: Python ``if``/``while``/``for``/``assert``
+  branching on traced values inside jit-reachable functions.
+- R004 unsynced benchmark timing: ``time.perf_counter()`` windows that
+  call real work with no ``jax.block_until_ready`` before the clock
+  stops (measures async dispatch, not execution).
+- R005 jit-cache hazards: ``jax.jit`` constructed inside a loop or per
+  call (uncached function body), and static_argnames/nums naming an
+  array-annotated parameter (hashed by value per call, or unhashable).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .engine import (
+    _STATIC_ATTRS,
+    Finding,
+    ModuleContext,
+    dotted_name,
+    register,
+)
+
+# -- shared expression helpers ---------------------------------------------
+
+_U64_DTYPES = {"uint64"}
+_I64_DTYPES = {"int64"}
+_NARROW_DTYPES = {
+    "int32", "uint32", "int16", "uint16", "int8", "uint8",
+    "float32", "float16", "bfloat16",
+}
+_JNP_64BIT = {"uint64", "int64", "float64"}
+_ARRAY_ANNOTATIONS = {"ndarray", "Array", "ArrayLike"}
+# calls whose cost/semantics are irrelevant to a timing window
+_TRIVIAL_CALLS = {
+    "perf_counter", "time", "print", "len", "range", "min", "max", "int",
+    "float", "str", "format", "append", "emit", "flush", "sum", "abs",
+    "round", "enumerate", "zip", "dict", "list", "tuple", "set", "sorted",
+    "isinstance", "getattr", "items", "keys", "values", "join", "split",
+}
+
+
+def _scope_nodes(scope: ast.AST, *, keep_lambdas: bool = False) -> List[ast.AST]:
+    """All nodes in ``scope`` excluding nested function/class bodies."""
+    out: List[ast.AST] = []
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        if isinstance(n, ast.Lambda) and not keep_lambdas:
+            continue
+        out.append(n)
+        stack.extend(ast.iter_child_nodes(n))
+    return sorted(out, key=lambda n: (getattr(n, "lineno", 0), getattr(n, "col_offset", 0)))
+
+
+def _np_attr(ctx: ModuleContext, node: ast.AST, attrs: Set[str]) -> bool:
+    """Is ``node`` the attribute ``np.<attr>`` for a numpy alias?"""
+    d = dotted_name(node)
+    if not d or "." not in d:
+        return False
+    root, _, attr = d.partition(".")
+    return root in ctx.numpy_aliases and attr in attrs
+
+
+def _jnp_attr(ctx: ModuleContext, node: ast.AST, attrs: Set[str]) -> bool:
+    d = dotted_name(node)
+    if not d or "." not in d:
+        return False
+    root, _, attr = d.partition(".")
+    return root in ctx.jnp_aliases and attr in attrs
+
+
+def _is_dtype_ref(ctx: ModuleContext, node: ast.AST, dtypes: Set[str]) -> bool:
+    """np.uint64 / jnp.uint64 / "uint64" style dtype references."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in dtypes
+    return _np_attr(ctx, node, dtypes) or _jnp_attr(ctx, node, dtypes)
+
+
+class _U64Scope:
+    """Local-dataflow uint64 typing for one scope (module or function)."""
+
+    def __init__(self, ctx: ModuleContext, scope: ast.AST,
+                 inherited: Optional[Set[str]] = None):
+        self.ctx = ctx
+        self.names: Set[str] = set(inherited or ())
+        assigns = [
+            n for n in _scope_nodes(scope)
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))
+        ]
+        for _ in range(2):  # 2 passes reach fixpoint on straight-line chains
+            for a in assigns:
+                value = a.value
+                if value is None or not self.is_u64(value):
+                    continue
+                targets = a.targets if isinstance(a, ast.Assign) else [a.target]
+                for t in targets:
+                    for el in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                        if isinstance(el, ast.Name):
+                            self.names.add(el.id)
+
+    def is_u64(self, node: ast.AST) -> bool:
+        ctx = self.ctx
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Subscript):
+            return self.is_u64(node.value)
+        if isinstance(node, (ast.UnaryOp,)):
+            return self.is_u64(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self.is_u64(node.left) or self.is_u64(node.right)
+        if isinstance(node, ast.IfExp):
+            return self.is_u64(node.body) or self.is_u64(node.orelse)
+        if isinstance(node, ast.Call):
+            # np.uint64(x) constructor
+            if _np_attr(ctx, node.func, _U64_DTYPES):
+                return True
+            # x.astype(np.uint64)
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("astype", "view")
+                and node.args
+                and _is_dtype_ref(ctx, node.args[0], _U64_DTYPES)
+            ):
+                return True
+            # u64-preserving numpy transforms: np.sort(w), np.concatenate(...)
+            if _np_attr(ctx, node.func, {
+                "sort", "concatenate", "unique", "where", "pad", "minimum",
+                "maximum", "copy", "ascontiguousarray", "flip", "roll",
+            }):
+                for arg in node.args:
+                    elts = arg.elts if isinstance(arg, (ast.List, ast.Tuple)) else [arg]
+                    if any(self.is_u64(e) for e in elts):
+                        return True
+        return False
+
+
+def _uses_traced(node: ast.AST, traced: Set[str]) -> bool:
+    """Does this expression read a traced value?
+
+    Skips subtrees whose result is host-static: ``x.shape``-style
+    attribute reads and ``len(x)``.
+    """
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) and n.func.id == "len":
+            continue
+        if isinstance(n, ast.Name) and n.id in traced:
+            return True
+        stack.extend(ast.iter_child_nodes(n))
+    return False
+
+
+def _traced_names(ctx: ModuleContext, fn) -> Set[str]:
+    """Parameters traced under jit, plus names derived from them."""
+    args = fn.args
+    params = [
+        a.arg
+        for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    ]
+    static = ctx.static_params.get(fn.name, set())
+    traced = {p for p in params if p not in static}
+    assigns = [
+        n for n in _scope_nodes(fn, keep_lambdas=True)
+        if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))
+    ]
+    for _ in range(2):
+        for a in assigns:
+            if a.value is None or not _uses_traced(a.value, traced):
+                continue
+            targets = a.targets if isinstance(a, ast.Assign) else [a.target]
+            for t in targets:
+                for el in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                    if isinstance(el, ast.Name):
+                        traced.add(el.id)
+    return traced
+
+
+# -- R001: host transfer inside jit-traced code ----------------------------
+
+
+@register(
+    "R001",
+    "host-transfer-in-jit",
+    "host calls (np.*, float/int/bool, .item()/.tolist(), jax.device_get) "
+    "on traced values inside jit/pallas/shard_map-reachable functions",
+)
+def check_host_transfer(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in sorted(ctx.jit_reachable):
+        fn = ctx.functions.get(name)
+        if fn is None:
+            continue
+        traced = _traced_names(ctx, fn)
+        for node in _scope_nodes(fn, keep_lambdas=True):
+            if not isinstance(node, ast.Call):
+                continue
+            argish = list(node.args) + [kw.value for kw in node.keywords]
+            touches = any(_uses_traced(a, traced) for a in argish)
+            # np.anything(traced) — trace-time host compute / forced transfer
+            d = dotted_name(node.func)
+            if d and d.partition(".")[0] in ctx.numpy_aliases and touches:
+                findings.append(ctx.finding(
+                    "R001", node,
+                    f"host numpy call `{d}` on a traced value inside "
+                    f"jit-reachable `{name}` (forces a device->host "
+                    "transfer or silently computes at trace time)"))
+                continue
+            # float(x) / int(x) / bool(x) on traced values
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool", "complex")
+                and touches
+            ):
+                findings.append(ctx.finding(
+                    "R001", node,
+                    f"`{node.func.id}()` on a traced value inside "
+                    f"jit-reachable `{name}` (implicit device->host "
+                    "transfer; fails under jax.transfer_guard)"))
+                continue
+            # x.item() / x.tolist() where x is traced
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("item", "tolist", "to_py")
+                and _uses_traced(node.func.value, traced)
+            ):
+                findings.append(ctx.finding(
+                    "R001", node,
+                    f"`.{node.func.attr}()` on a traced value inside "
+                    f"jit-reachable `{name}` (device->host transfer)"))
+                continue
+            # jax.device_get(traced)
+            if d and any(d == f"{a}.device_get" for a in ctx.jax_aliases) and touches:
+                findings.append(ctx.finding(
+                    "R001", node,
+                    f"`jax.device_get` inside jit-reachable `{name}` "
+                    "(host transfer mid-trace)"))
+    return findings
+
+
+# -- R002: dtype-contract drift --------------------------------------------
+
+
+@register(
+    "R002",
+    "dtype-contract-drift",
+    "uint64 packed-word arithmetic with untyped int literals or int64 "
+    "values, narrowing casts straight off a uint64 word, and 64-bit jnp "
+    "dtype references while x64 is disabled",
+)
+def check_dtype_contracts(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # (d) jnp.uint64 / jnp.int64 / jnp.float64 anywhere: x64 is off
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and _jnp_attr(ctx, node, _JNP_64BIT):
+            findings.append(ctx.finding(
+                "R002", node,
+                f"`{dotted_name(node)}` with x64 disabled is silently "
+                "32-bit — use core/u64.py limb pairs for 64-bit values"))
+
+    module_scope = _U64Scope(ctx, ctx.tree)
+    scopes = [(ctx.tree, module_scope)]
+    for fn in ctx.functions.values():
+        scopes.append((fn, _U64Scope(ctx, fn, inherited=module_scope.names)))
+
+    seen: Set[int] = set()
+    for scope, u64 in scopes:
+        for node in _scope_nodes(scope, keep_lambdas=True):
+            if id(node) in seen:
+                continue
+            # (a)/(b) uint64 mixed with untyped literal or int64 value
+            if isinstance(node, ast.BinOp) and not isinstance(node.op, (ast.MatMult,)):
+                left_u64, right_u64 = u64.is_u64(node.left), u64.is_u64(node.right)
+                if left_u64 ^ right_u64:
+                    other = node.right if left_u64 else node.left
+                    if isinstance(other, ast.Constant) and isinstance(other.value, int) \
+                            and not isinstance(other.value, bool):
+                        seen.add(id(node))
+                        findings.append(ctx.finding(
+                            "R002", node,
+                            "uint64 arithmetic with an untyped int literal "
+                            "(NumPy 1.x value-based casting promotes through "
+                            "int64 to float64 — precision loss past 2**53); "
+                            "wrap the literal in np.uint64(...)"))
+                    elif isinstance(other, ast.Call) and (
+                        _np_attr(ctx, other.func, _I64_DTYPES)
+                        or (
+                            isinstance(other.func, ast.Attribute)
+                            and other.func.attr == "astype"
+                            and other.args
+                            and _is_dtype_ref(ctx, other.args[0], _I64_DTYPES)
+                        )
+                    ):
+                        seen.add(id(node))
+                        findings.append(ctx.finding(
+                            "R002", node,
+                            "uint64 x int64 arithmetic promotes to float64 "
+                            "(even under NEP 50) — cast one side explicitly"))
+            # (c) narrowing cast straight off a uint64 word
+            if isinstance(node, ast.Call):
+                cast_to_narrow = (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype"
+                    and node.args
+                    and _is_dtype_ref(ctx, node.args[0], _NARROW_DTYPES)
+                )
+                if cast_to_narrow:
+                    src_node = node.func.value
+                elif (
+                    (_np_attr(ctx, node.func, _NARROW_DTYPES)
+                     or _jnp_attr(ctx, node.func, _NARROW_DTYPES))
+                    and len(node.args) == 1
+                ):
+                    src_node = node.args[0]
+                else:
+                    continue
+                # masked/shifted words ((w >> k), (w & m)) narrow on purpose
+                if isinstance(src_node, (ast.Name, ast.Subscript)) and u64.is_u64(src_node):
+                    seen.add(id(node))
+                    findings.append(ctx.finding(
+                        "R002", node,
+                        "narrowing cast directly off a uint64 packed word "
+                        "drops high bits (62-bit word / 23-bit rid contract) "
+                        "— mask or shift the field out explicitly first"))
+    return findings
+
+
+# -- R003: Python control flow on traced values ----------------------------
+
+
+@register(
+    "R003",
+    "tracer-control-flow",
+    "Python if/while/for/assert branching on traced values inside "
+    "jit-reachable functions (TracerBoolConversionError at trace time, or "
+    "silent per-value recompilation)",
+)
+def check_tracer_control_flow(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for name in sorted(ctx.jit_reachable):
+        fn = ctx.functions.get(name)
+        if fn is None:
+            continue
+        traced = _traced_names(ctx, fn)
+        for node in _scope_nodes(fn, keep_lambdas=True):
+            test: Optional[ast.AST] = None
+            kind = ""
+            if isinstance(node, (ast.If, ast.While)):
+                test, kind = node.test, type(node).__name__.lower()
+            elif isinstance(node, ast.IfExp):
+                test, kind = node.test, "conditional expression"
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                test, kind = node.iter, "for-loop iteration"
+            if test is not None and _uses_traced(test, traced):
+                findings.append(ctx.finding(
+                    "R003", node,
+                    f"Python {kind} on a traced value inside jit-reachable "
+                    f"`{name}` — use jax.lax.cond/while_loop/fori_loop or "
+                    "jnp.where (Python control flow branches at trace time)"))
+    return findings
+
+
+# -- R004: unsynced benchmark timing ---------------------------------------
+
+
+def _is_perf_counter_call(ctx: ModuleContext, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    if isinstance(node.func, ast.Name) and node.func.id in ctx.perf_counter_names:
+        return True
+    d = dotted_name(node.func)
+    return bool(d) and any(d == f"{t}.perf_counter" for t in ctx.time_aliases)
+
+
+def _is_sync_call(ctx: ModuleContext, node: ast.Call) -> bool:
+    # jax.block_until_ready / x.block_until_ready(), plus the benchmarks'
+    # `sync(...)` helper (benchmarks/common.py), which wraps it
+    if isinstance(node.func, ast.Attribute) and node.func.attr in (
+        "block_until_ready", "sync",
+    ):
+        return True
+    if isinstance(node.func, ast.Name) and node.func.id == "sync":
+        return True
+    d = dotted_name(node.func)
+    return bool(d) and any(d == f"{a}.block_until_ready" for a in ctx.jax_aliases)
+
+
+def _is_trivial_call(ctx: ModuleContext, node: ast.Call) -> bool:
+    if _is_perf_counter_call(ctx, node):
+        return True
+    if isinstance(node.func, ast.Name):
+        return node.func.id in _TRIVIAL_CALLS
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr in _TRIVIAL_CALLS
+    return False
+
+
+@register(
+    "R004",
+    "unsynced-benchmark-timing",
+    "time.perf_counter() windows that run real work with no "
+    "jax.block_until_ready before the clock stops (JAX dispatch is async: "
+    "the window measures enqueue time, not execution)",
+)
+def check_unsynced_timing(ctx: ModuleContext) -> List[Finding]:
+    if not ctx.imports_jaxlike:
+        return []
+    findings: List[Finding] = []
+    scopes: List[ast.AST] = [ctx.tree] + list(ctx.functions.values())
+    for scope in scopes:
+        nodes = _scope_nodes(scope, keep_lambdas=True)
+        starts = [
+            (n.targets[0].id, n.lineno)
+            for n in nodes
+            if isinstance(n, ast.Assign)
+            and len(n.targets) == 1
+            and isinstance(n.targets[0], ast.Name)
+            and _is_perf_counter_call(ctx, n.value)
+        ]
+        stops = [
+            (n.right.id, n.lineno, n)
+            for n in nodes
+            if isinstance(n, ast.BinOp)
+            and isinstance(n.op, ast.Sub)
+            and _is_perf_counter_call(ctx, n.left)
+            and isinstance(n.right, ast.Name)
+        ]
+        for var, start_line in starts:
+            matching = [s for s in stops if s[0] == var and s[1] >= start_line]
+            if not matching:
+                continue
+            _, stop_line, stop_node = min(matching, key=lambda s: s[1])
+            window = [
+                c for c in nodes
+                if isinstance(c, ast.Call) and start_line < c.lineno <= stop_line
+            ]
+            if any(_is_sync_call(ctx, c) for c in window):
+                continue
+            if any(not _is_trivial_call(ctx, c) and not _is_sync_call(ctx, c)
+                   for c in window):
+                findings.append(ctx.finding(
+                    "R004", stop_node,
+                    f"timing window `{var}` (opened line {start_line}) stops "
+                    "the clock without jax.block_until_ready on the timed "
+                    "outputs — measures async dispatch, not execution"))
+    return findings
+
+
+# -- R005: jit-cache hazards -----------------------------------------------
+
+
+def _has_cache_decorator(ctx: ModuleContext, fn) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Name) and target.id in ctx.cache_deco_names:
+            return True
+        d = dotted_name(target)
+        if d and any(d in (f"{a}.lru_cache", f"{a}.cache")
+                     for a in ctx.functools_aliases):
+            return True
+    return False
+
+
+def _is_self_attr_assign(ctx: ModuleContext, call: ast.Call) -> bool:
+    """``self._step = jax.jit(...)``: per-instance cache, a legit idiom."""
+    parent = ctx.parents.get(call)
+    if isinstance(parent, ast.Assign) and parent.value is call:
+        return any(
+            isinstance(t, ast.Attribute)
+            and isinstance(t.value, ast.Name)
+            and t.value.id == "self"
+            for t in parent.targets
+        )
+    return False
+
+
+def _is_array_annotation(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        tail = node.value.split("[")[0].split(".")[-1]
+        return tail in _ARRAY_ANNOTATIONS
+    if isinstance(node, ast.Subscript):  # e.g. jax.Array-ish generics
+        return _is_array_annotation(node.value)
+    d = dotted_name(node)
+    if d:
+        return d.split(".")[-1] in _ARRAY_ANNOTATIONS
+    return False
+
+
+def _array_static_findings(ctx: ModuleContext, call_or_dec: ast.Call, fn,
+                           findings: List[Finding]) -> None:
+    static = ctx._static_argnames_from_call(call_or_dec, fn)
+    args = fn.args
+    ann = {
+        a.arg: a.annotation
+        for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    }
+    for p in sorted(static):
+        if _is_array_annotation(ann.get(p)):
+            findings.append(ctx.finding(
+                "R005", call_or_dec,
+                f"static arg `{p}` of `{fn.name}` is array-annotated — "
+                "arrays are unhashable (TypeError) or retrace per value; "
+                "pass it traced or hash a scalar summary instead"))
+
+
+@register(
+    "R005",
+    "jit-cache-hazard",
+    "jax.jit constructed inside a loop or per call (uncached function "
+    "body), and static_argnames/static_argnums naming an array-annotated "
+    "parameter",
+)
+def check_jit_cache(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and ctx.is_jit_expr(node.func):
+            encl = ctx.enclosing_function(node)
+            if ctx.inside_loop(node, stop_at=encl):
+                findings.append(ctx.finding(
+                    "R005", node,
+                    "jax.jit constructed inside a loop — every iteration "
+                    "builds a new callable with a fresh compilation cache; "
+                    "hoist the jit out of the loop"))
+            elif encl is not None and not _has_cache_decorator(ctx, encl) \
+                    and not _is_self_attr_assign(ctx, node):
+                findings.append(ctx.finding(
+                    "R005", node,
+                    f"jax.jit constructed inside `{encl.name}` without "
+                    "functools.lru_cache — each call recompiles; hoist to "
+                    "module scope or lru_cache the builder"))
+            # array-valued static args on the wrapped local function
+            for name in ctx._named_targets(node):
+                if name in ctx.functions:
+                    _array_static_findings(ctx, node, ctx.functions[name], findings)
+    # decorator form: @partial(jax.jit, static_argnames=...) naming arrays
+    for fn in ctx.functions.values():
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) and (
+                ctx.is_jit_expr(dec.func)
+                or (ctx.is_partial_expr(dec.func) and dec.args
+                    and ctx.is_jit_expr(dec.args[0]))
+            ):
+                _array_static_findings(ctx, dec, fn, findings)
+    return findings

@@ -10,9 +10,9 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-from . import ARCH_IDS, get_config
+from . import ARCH_IDS
 
 
 @dataclasses.dataclass(frozen=True)

@@ -85,7 +85,21 @@ class DistConfig:
 def make_hdb_step(cfg: HDBConfig, mesh: Mesh,
                   axis_names: Sequence[str],
                   dist: DistConfig = DistConfig()):
-    """Build the jitted, shard_mapped distributed HDB iteration."""
+    """Build the jitted, shard_mapped distributed HDB iteration.
+
+    Thin wrapper that normalizes ``axis_names`` so the lru-cached builder
+    keys on hashable statics only — repeated drivers over the same mesh
+    geometry reuse the compiled step instead of re-jitting per call (the
+    repro.analysis R005 hazard; the routed-dedupe builders below already
+    worked this way).
+    """
+    return _make_hdb_step_cached(cfg, mesh, tuple(axis_names), dist)
+
+
+@functools.lru_cache(maxsize=16)
+def _make_hdb_step_cached(cfg: HDBConfig, mesh: Mesh,
+                          axis_names: Tuple[str, ...],
+                          dist: DistConfig):
     n_shards = sharding.axis_size(mesh, tuple(axis_names))
     axes = tuple(axis_names)
     bloom_cfg = sketches.BloomConfig(dist.bloom_slots, dist.bloom_hashes)
@@ -246,7 +260,7 @@ def distributed_hashed_dynamic_blocking(
     sharding2 = NamedSharding(mesh, P(axes, None))
     keys_packed = jax.device_put(keys_packed, sharding3)
     valid = jax.device_put(valid, sharding2)
-    psize = jax.device_put(jnp.full(valid.shape, INT32_MAX, jnp.int32), sharding2)
+    psize = jax.device_put(np.full(valid.shape, INT32_MAX, np.int32), sharding2)
 
     step = make_hdb_step(cfg, mesh, axes, dist)
     acc_rid: List[np.ndarray] = []
@@ -474,9 +488,12 @@ def dedupe_pairs_distributed(
                                       interpret=interpret,
                                       sort_backend=sort_backend)
 
-    start32 = jnp.asarray(blocks.start, jnp.int32)
-    size32 = jnp.asarray(blocks.size, jnp.int32)
-    mem32 = jnp.asarray(blocks.members, jnp.int32)
+    # host casts + explicit uploads: dtype-coercing jnp.asarray and scalar
+    # jnp dtype constructors are implicit host->device transfers, rejected
+    # under jax.transfer_guard("disallow") (repro.analysis R001)
+    start32 = jnp.asarray(blocks.start.astype(np.int32))
+    size32 = jnp.asarray(blocks.size.astype(np.int32))
+    mem32 = jnp.asarray(blocks.members.astype(np.int32))
     steps = pairs_kernels.search_steps_for(int(blocks.size.max()))
     cap = int(np.ceil(chunk / n_shards * route_slack))
     step = _make_routed_round_step(mesh, axes, n_shards, chunk, cap,
@@ -484,8 +501,9 @@ def dedupe_pairs_distributed(
 
     rhi, rlo, ovfs = [], [], []
     if exact:
-        cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
-        total32 = jnp.asarray(total, jnp.int32)
+        cum32 = jnp.asarray(
+            pairs_ref.cum_pair_counts(blocks.size).astype(np.int32))
+        total32 = jax.device_put(np.int32(total))
         shard_offsets = np.arange(n_shards, dtype=np.int32) * chunk
         for r0 in range(0, total, per_round):
             base = jnp.asarray(np.int32(r0) + shard_offsets)
@@ -609,11 +627,11 @@ def materialize_pairs_distributed(
                                       interpret=interpret,
                                       sort_backend=sort_backend)
 
-    cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
-    start32 = jnp.asarray(blocks.start, jnp.int32)
-    size32 = jnp.asarray(blocks.size, jnp.int32)
-    mem32 = jnp.asarray(blocks.members, jnp.int32)
-    total32 = jnp.asarray(total, jnp.int32)
+    cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size).astype(np.int32))
+    start32 = jnp.asarray(blocks.start.astype(np.int32))
+    size32 = jnp.asarray(blocks.size.astype(np.int32))
+    mem32 = jnp.asarray(blocks.members.astype(np.int32))
+    total32 = jax.device_put(np.int32(total))
     mapped = _make_decode_round_step(mesh, axes, chunk, interpret)
 
     shard_offsets = np.arange(n_shards, dtype=np.int32) * chunk

@@ -30,7 +30,7 @@ import dataclasses
 import functools
 import logging
 import warnings
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -338,7 +338,9 @@ def hashed_dynamic_blocking(
       valid: (N, K) bool.
     """
     n = valid.shape[0]
-    psize = jnp.full(valid.shape, INT32_MAX, jnp.int32)
+    # explicit upload: eager jnp.full is an implicit host->device transfer
+    # (rejected under jax.transfer_guard("disallow") — repro.analysis R001)
+    psize = jnp.asarray(np.full(valid.shape, INT32_MAX, np.int32))
     acc_rid: List[np.ndarray] = []
     acc_hi: List[np.ndarray] = []
     acc_lo: List[np.ndarray] = []

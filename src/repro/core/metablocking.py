@@ -24,7 +24,7 @@ weighting stay numpy host-side.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -11,6 +11,7 @@ VMEM tiling and is validated against this module.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -73,11 +74,16 @@ def band_keys(minhashes: jnp.ndarray, bands: int, rows_per_band: int,
     return h
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("bands", "rows_per_band", "column_seed"))
 def lsh_keys(tokens: jnp.ndarray, mask: jnp.ndarray, bands: int,
              rows_per_band: int, column_seed: int = 0) -> Tuple[U64, jnp.ndarray]:
     """LSH blocking keys + validity for a padded token-set column.
 
-    Rows with zero valid tokens emit no keys (valid=False).
+    Rows with zero valid tokens emit no keys (valid=False). Jitted: the
+    MinHash sponge builds its per-hash seed tables as host constants,
+    which eager dispatch would upload implicitly per call
+    (repro.analysis R001; rejected by the transfer-guarded tests).
     """
     mh = minhash_tokens(tokens, mask, bands * rows_per_band)
     keys = band_keys(mh, bands, rows_per_band, column_seed)
@@ -88,5 +94,7 @@ def lsh_keys(tokens: jnp.ndarray, mask: jnp.ndarray, bands: int,
 
 def lsh_probability(bands: int, rows_per_band: int, jaccard) -> jnp.ndarray:
     """Analytic LSH(b, w, j) = 1 - (1 - j^w)^b (paper Fig. 1a)."""
-    j = jnp.asarray(jaccard, jnp.float64 if False else jnp.float32)
+    # float32 throughout: x64 is disabled, so jnp.float64 would silently
+    # be 32-bit anyway (repro.analysis R002); the curve needs ~3 digits
+    j = jnp.asarray(jaccard, jnp.float32)
     return 1.0 - (1.0 - j ** rows_per_band) ** bands

@@ -12,7 +12,6 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Dict, List, Set, Tuple
 
-import numpy as np
 
 from . import hashing
 from .hdb import HDBConfig

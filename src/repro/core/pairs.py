@@ -347,20 +347,24 @@ def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
     device elsewhere; ``"comparator"``/``"radix"`` force the device sort
     flavor (useful to exercise and benchmark either on any platform).
     """
-    start32 = jnp.asarray(blocks.start, jnp.int32)
-    size32 = jnp.asarray(blocks.size, jnp.int32)
-    mem32 = jnp.asarray(blocks.members, jnp.int32)
+    # host-side casts + explicit uploads: dtype-coercing jnp.asarray and
+    # jnp.int32(py_scalar) are implicit host->device transfers (rejected
+    # under jax.transfer_guard("disallow") — repro.analysis R001)
+    start32 = jnp.asarray(blocks.start.astype(np.int32))
+    size32 = jnp.asarray(blocks.size.astype(np.int32))
+    mem32 = jnp.asarray(blocks.members.astype(np.int32))
     steps = pairs_kernels.search_steps_for(int(blocks.size.max()))
     out_a, out_b, out_s, out_v = [], [], [], []
     if slots is None:
         # exact path: enumerate [0, total) on device
         cum = pairs_ref.cum_pair_counts(blocks.size)
-        cum32 = jnp.asarray(cum, jnp.int32)
+        cum32 = jnp.asarray(cum.astype(np.int32))
         chunk = min(chunk_pairs, _round_up(max(total, 1), 1024))
-        total32 = jnp.int32(total)
+        total32 = jax.device_put(np.int32(total))
         for base in range(0, total, chunk):
             a, b, s, v = pairs_kernels.decode_chunk(
-                cum32, start32, size32, mem32, jnp.int32(base), total32,
+                cum32, start32, size32, mem32,
+                jax.device_put(np.int32(base)), total32,
                 chunk=chunk, steps=steps, use_kernel=use_kernel,
                 interpret=interpret)
             out_a.append(a); out_b.append(b); out_s.append(s); out_v.append(v)
@@ -407,10 +411,15 @@ def _dedupe_device(blocks: Blocks, slots: Optional[np.ndarray], total: int,
         jnp.concatenate(out_s), jnp.concatenate(out_v),
         sort_backend=sort_kind, use_kernel=use_kernel, interpret=interpret,
         **kw)
+    # compact host-side (the winner count is data-dependent, so the mask
+    # gather can't stay on device without a dynamic shape; indexing the
+    # device array with a host mask would be an implicit transfer) and
+    # re-upload the compacted buffers explicitly for device consumers
     w = np.asarray(winner)
-    dev = (sa[w], sb[w])  # compact on device; host copies below share it
-    return (np.asarray(dev[0]).astype(np.int64),
-            np.asarray(dev[1]).astype(np.int64),
+    a_host = np.asarray(sa)[w]
+    b_host = np.asarray(sb)[w]
+    dev = (jnp.asarray(a_host), jnp.asarray(b_host))
+    return (a_host.astype(np.int64), b_host.astype(np.int64),
             np.asarray(ss)[w].astype(np.int64), dev)
 
 
@@ -504,16 +513,17 @@ def enumerate_pairs(blocks: Blocks, backend: str = "auto",
     total = blocks.num_pair_slots
     if total == 0:
         return
-    cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size), jnp.int32)
-    start32 = jnp.asarray(blocks.start, jnp.int32)
-    size32 = jnp.asarray(blocks.size, jnp.int32)
-    mem32 = jnp.asarray(blocks.members, jnp.int32)
+    cum32 = jnp.asarray(pairs_ref.cum_pair_counts(blocks.size).astype(np.int32))
+    start32 = jnp.asarray(blocks.start.astype(np.int32))
+    size32 = jnp.asarray(blocks.size.astype(np.int32))
+    mem32 = jnp.asarray(blocks.members.astype(np.int32))
     steps = pairs_kernels.search_steps_for(int(blocks.size.max()))
     chunk = min(chunk_pairs, _round_up(max(total, 1), 1024))
-    total32 = jnp.int32(total)
+    total32 = jax.device_put(np.int32(total))
     for base in range(0, total, chunk):
         a, b, s, v = pairs_kernels.decode_chunk(
-            cum32, start32, size32, mem32, jnp.int32(base), total32,
+            cum32, start32, size32, mem32,
+            jax.device_put(np.int32(base)), total32,
             chunk=chunk, steps=steps, use_kernel=(backend == "pallas"),
             interpret=interpret)
         vm = np.asarray(v)

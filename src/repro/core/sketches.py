@@ -14,13 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import u64, hashing
+from . import hashing
 from .u64 import U64
 
 

@@ -10,6 +10,7 @@ pair than blocking — preserving the economics that make blocking matter.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict
 
 import jax
@@ -41,8 +42,20 @@ def _pair_jaccard(tok: jnp.ndarray, mask: jnp.ndarray, a: jnp.ndarray,
     return jnp.where(both, inter / jnp.maximum(union, 1), 0.0), both
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("bucket",))
+def _gather_bucket(x: jnp.ndarray, start: jnp.ndarray, *,
+                   bucket: int) -> jnp.ndarray:
+    """Device-side bucket slice by clamped gather: one compile per bucket
+    size (bounded), any start offset, no implicit transfers."""
+    idx = start + jnp.arange(bucket, dtype=jnp.int32)
+    idx = jnp.clip(idx, 0, x.shape[0] - 1)
+    return x[idx].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("weights",))
 def _score_batch(tokens, masks, weights, a, b):
+    # weights is a static tuple of python floats: traced scalars would be
+    # one implicit host->device upload apiece (repro.analysis R001)
     total = jnp.zeros(a.shape, jnp.float32)
     norm = jnp.zeros(a.shape, jnp.float32)
     for i in range(len(weights)):
@@ -72,7 +85,7 @@ def score_pairs(columns: Dict[str, TokenColumn], a, b,
     weights = tuple(w for n, w in cfg.weights if n in columns)
     n_pairs = int(a.shape[0])
     out = np.empty(n_pairs, np.float32)
-    xp = jnp if isinstance(a, jax.Array) else np
+    on_device = isinstance(a, jax.Array)
     for off in range(0, n_pairs, batch):
         sl = slice(off, min(off + batch, n_pairs))
         m = sl.stop - sl.start
@@ -80,14 +93,19 @@ def score_pairs(columns: Dict[str, TokenColumn], a, b,
         while bucket < m:
             bucket *= 2
         bucket = min(bucket, batch)
-        aa = xp.asarray(a[sl])
-        bb = xp.asarray(b[sl])
-        if bucket > m:
-            aa = xp.pad(aa, (0, bucket - m))
-            bb = xp.pad(bb, (0, bucket - m))
-        got = _score_batch(tokens, masks, weights,
-                           jnp.asarray(aa, jnp.int32),
-                           jnp.asarray(bb, jnp.int32))
+        if on_device:
+            # device inputs stay device-side: a jitted clamped gather
+            # slices the bucket (eager slicing/padding would be implicit
+            # transfers — repro.analysis R001); pad lanes replicate the
+            # tail element and are discarded by the [:m] crop below
+            start = jax.device_put(np.int32(off))
+            aa = _gather_bucket(a, start, bucket=bucket)
+            bb = _gather_bucket(b, start, bucket=bucket)
+        else:
+            pad = (0, bucket - m)
+            aa = jnp.asarray(np.pad(np.asarray(a[sl], np.int32), pad))
+            bb = jnp.asarray(np.pad(np.asarray(b[sl], np.int32), pad))
+        got = _score_batch(tokens, masks, weights, aa, bb)
         out[sl] = np.asarray(got)[:m]
     return out
 

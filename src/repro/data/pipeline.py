@@ -127,9 +127,11 @@ class DedupPipeline:
             self._matched = self._matched[keep]
         if len(a):
             cols = self._columns.columns()
+            # pre-cast host-side then upload explicitly: dtype-coercing
+            # jnp.asarray is an implicit transfer (repro.analysis R001)
             matched = matcher.match_pairs(
-                cols, jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32),
-                self.match_cfg)
+                cols, jnp.asarray(np.asarray(a, np.int32)),
+                jnp.asarray(np.asarray(b, np.int32)), self.match_cfg)
             new = pack_pair(a[matched], b[matched])
             self._matched = np.union1d(self._matched, new)
         t2 = time.perf_counter()

@@ -25,7 +25,6 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from ..core import hashing
 from ..core.blocks import ColumnBlocking, TokenColumn
 
 import jax.numpy as jnp
@@ -131,8 +130,10 @@ def generate(spec: SyntheticSpec) -> Corpus:
     desc_w = spec.desc_len[1]
     name_len = rng.integers(spec.name_len[0], spec.name_len[1] + 1, e)
     desc_len = rng.integers(spec.desc_len[0], spec.desc_len[1] + 1, e)
-    name_tok = _token_hash(_zipf_ids(rng, e * name_w, spec.vocab, spec.zipf_a), 1).reshape(e, name_w)
-    desc_tok = _token_hash(_zipf_ids(rng, e * desc_w, spec.vocab, spec.zipf_a), 2).reshape(e, desc_w)
+    name_tok = _token_hash(
+        _zipf_ids(rng, e * name_w, spec.vocab, spec.zipf_a), 1).reshape(e, name_w)
+    desc_tok = _token_hash(
+        _zipf_ids(rng, e * desc_w, spec.vocab, spec.zipf_a), 2).reshape(e, desc_w)
     name_mask = np.arange(name_w)[None, :] < name_len[:, None]
     desc_mask = np.arange(desc_w)[None, :] < desc_len[:, None]
     brand = _token_hash(rng.integers(0, spec.brand_card, e), 3)

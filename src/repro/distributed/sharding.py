@@ -13,7 +13,7 @@ import contextlib
 import contextvars
 import dataclasses
 import re
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -12,7 +12,6 @@ lane-aligned tiles (last dim a multiple of 128).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

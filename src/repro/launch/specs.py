@@ -2,13 +2,12 @@
 ShapeDtypeStructs for the dry-run (weak-type-correct, no allocation)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.shapes import ShapeSpec
 from ..models.config import ModelConfig
 from ..models.model import Model
 

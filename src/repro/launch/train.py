@@ -16,12 +16,9 @@ mesh, and full configs shard per DESIGN.md §5.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import sys
 import time
 
 import jax
-import numpy as np
 
 from ..configs import get_config, reduced_config
 from ..core import hdb
@@ -91,7 +88,8 @@ def main(argv=None):
             state = checkpoint.restore(args.ckpt_dir,
                                        jax.eval_shape(lambda: state))
             print(f"[train] resumed from step {start}")
-        step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=0)
+        step_fn = jax.jit(make_train_step(model, tcfg),  # repro: noqa[R005] one-shot launch driver
+                          donate_argnums=0)
         monitor = StragglerMonitor()
         preempt = PreemptionHandler().install()
         t0 = time.time()

@@ -6,7 +6,6 @@ G = H/KV query heads per KV head.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,6 @@ pre-LN blocks with GELU MLPs, no RoPE.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .config import ModelConfig
 from .layers import dense_init

@@ -77,7 +77,7 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions=None,
         new_cache = None
     elif s >= cfg.attn_chunk_threshold:
         # PREFILL into the latent cache: expand k/v once, chunked attention
-        from .attention import _chunked_attend, _repeat_kv
+        from .attention import _chunked_attend
         pos = cache["pos"]
         cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
         cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, axis=1)

@@ -14,14 +14,13 @@ Batch dict:  tokens (B,S) int32, targets (B,S) int32, and per modality:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
 from . import encdec, layers, transformer
-from ..distributed.sharding import lshard
 
 
 def cross_entropy(logits, targets, vocab: int):

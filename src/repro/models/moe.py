@@ -17,8 +17,7 @@ Router aux-loss follows the standard load-balancing form
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,15 +13,13 @@ jamba = 9x scanned unit of 8 sublayers [7 mamba + 1 attn, alternating moe].
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
 from . import attention, layers, mamba, mla, moe, rwkv
-from ..distributed.sharding import lshard
 
 LayerSpec = Tuple[str, str]  # (mixer_kind, ffn_kind)
 
@@ -134,7 +132,6 @@ class Stack:
         for i, spec in enumerate(self.prefix):
             p["prefix"].append(_layer_init(jax.random.fold_in(key, i), spec, cfg))
         for j, spec in enumerate(self.unit):
-            stack = (self.n_repeat,) if cfg.scan_layers else ()
             if cfg.scan_layers:
                 p["unit"].append(_layer_init(
                     jax.random.fold_in(key, 100 + j), spec, cfg,

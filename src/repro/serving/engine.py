@@ -9,7 +9,7 @@ what production TPU serving stacks do to avoid recompiles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,6 +12,7 @@ directly (no host round trip of the pair arrays).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -40,6 +41,23 @@ class RecordBatch:
         cols = {name: (np.asarray(col.tokens)[idx], np.asarray(col.mask)[idx])
                 for name, col in corpus.columns.items()}
         return RecordBatch(columns=cols, num_records=len(idx))
+
+
+@functools.lru_cache(maxsize=1)
+def _row_patch_fn():
+    """Jitted row-patch for ColumnCache (built lazily: jax stays a local
+    import). One compile per (buffer, patch) shape pair — bounded by the
+    power-of-two capacity/bucket scheme. Eager dynamic_update_slice with
+    jnp.int32 scalar offsets would be an implicit transfer per append
+    (repro.analysis R001/R005)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def patch_rows(buf, patch, start):
+        return jax.lax.dynamic_update_slice(buf, patch, (start, jnp.int32(0)))
+
+    return patch_rows
 
 
 class ColumnCache:
@@ -92,7 +110,8 @@ class ColumnCache:
             while bucket < n:
                 bucket *= 2
             bucket = min(bucket, self._cap - self.num_records)
-            start = jnp.int32(self.num_records)
+            patch_rows = _row_patch_fn()
+            start = jax.device_put(np.int32(self.num_records))
             for name, (t, m) in columns.items():
                 self._host_t[name][self.num_records:new_len] = t
                 self._host_m[name][self.num_records:new_len] = m
@@ -102,10 +121,8 @@ class ColumnCache:
                 pt[:n], pm[:n] = t, m
                 col = self._dev[name]
                 self._dev[name] = blocks_mod.TokenColumn(
-                    jax.lax.dynamic_update_slice(
-                        col.tokens, jnp.asarray(pt), (start, jnp.int32(0))),
-                    jax.lax.dynamic_update_slice(
-                        col.mask, jnp.asarray(pm), (start, jnp.int32(0))))
+                    patch_rows(col.tokens, jnp.asarray(pt), start),
+                    patch_rows(col.mask, jnp.asarray(pm), start))
         self.num_records = new_len
 
     def columns(self) -> Dict[str, blocks_mod.TokenColumn]:
@@ -230,10 +247,14 @@ class StreamingEngine:
     def _score_new_pairs(self, report: IngestReport) -> np.ndarray:
         """Matcher scores for this ingest's new candidate pairs, fed the
         pair buffers directly (device arrays stay device-side)."""
+        import jax
         import jax.numpy as jnp
         from ..data import matcher
         a, b, _ = report.pairs_added
-        return matcher.score_pairs(self.column_cache.columns(),
-                                   jnp.asarray(a, jnp.int32),
-                                   jnp.asarray(b, jnp.int32),
+        if not isinstance(a, jax.Array):
+            # host buffers: pre-cast then upload explicitly (dtype-coercing
+            # jnp.asarray is an implicit transfer — repro.analysis R001)
+            a = jnp.asarray(np.asarray(a, np.int32))
+            b = jnp.asarray(np.asarray(b, np.int32))
+        return matcher.score_pairs(self.column_cache.columns(), a, b,
                                    self.matcher_cfg)

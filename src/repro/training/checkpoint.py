@@ -9,14 +9,12 @@
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
-import tempfile
 import threading
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

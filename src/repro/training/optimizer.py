@@ -7,7 +7,7 @@ default with a bf16 option (``moment_dtype``) for HBM-tight configs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

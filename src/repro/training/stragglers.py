@@ -17,10 +17,9 @@ timings (tests/test_fault_tolerance.py); the logic is host-count agnostic.
 from __future__ import annotations
 
 import dataclasses
-import os
 import signal
 import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 
 @dataclasses.dataclass

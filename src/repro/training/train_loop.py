@@ -10,8 +10,7 @@ really shrink (tests/test_training.py checks convergence parity).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

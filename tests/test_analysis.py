@@ -1,0 +1,324 @@
+"""repro.analysis rule pack: each rule must fire on a known-bad fixture
+and stay quiet on the fixed version of the same code, suppressions must
+downgrade findings without hiding them, and the repo's own hot-path
+packages must be finding-free (the self-hosting gate that keeps the CI
+lint lane meaningful)."""
+import os
+
+import pytest
+
+from repro.analysis import all_rules, analyze_paths, analyze_source, run_cli
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
+
+
+def _live(src, select=None):
+    return [f for f in analyze_source(src, select=select) if not f.suppressed]
+
+
+def _rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# R001 host transfer inside jit
+# ---------------------------------------------------------------------------
+
+BAD_R001 = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@jax.jit
+def step(x):
+    y = np.asarray(x)
+    return jnp.sum(jnp.asarray(y))
+"""
+
+BAD_R001_TRANSITIVE = """
+import functools
+import jax
+import jax.numpy as jnp
+
+def helper(x):
+    return float(x[0]) + 1.0
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    return helper(x) * n
+"""
+
+GOOD_R001 = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+def host_prep(a):
+    return np.asarray(a, np.int32)  # outside any jit root: fine
+
+@jax.jit
+def step(x):
+    return jnp.sum(x * 2)
+"""
+
+
+def test_r001_fires_on_numpy_call_in_jit():
+    findings = _live(BAD_R001, select=["R001"])
+    assert _rules_of(findings) == {"R001"}
+    assert any("np.asarray" in f.message for f in findings)
+
+
+def test_r001_fires_through_the_call_graph():
+    findings = _live(BAD_R001_TRANSITIVE, select=["R001"])
+    assert _rules_of(findings) == {"R001"}
+    assert all(f.line for f in findings)
+
+
+def test_r001_quiet_on_host_side_numpy():
+    assert _live(GOOD_R001, select=["R001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R002 dtype-contract drift
+# ---------------------------------------------------------------------------
+
+BAD_R002_LITERAL = """
+import numpy as np
+
+def pack(w):
+    w = np.uint64(w)
+    return w + 3
+"""
+
+BAD_R002_NARROW = """
+import numpy as np
+
+def truncate(words):
+    w = np.uint64(words)
+    return w.astype(np.int32)
+"""
+
+BAD_R002_JNP64 = """
+import jax.numpy as jnp
+
+def keys(x):
+    return x.astype(jnp.uint64)
+"""
+
+GOOD_R002 = """
+import numpy as np
+
+def pack(w):
+    w = np.uint64(w)
+    return w + np.uint64(3)
+
+def low_bits(words):
+    w = np.uint64(words)
+    return (w & np.uint64(0xFFFF)).astype(np.int32)
+"""
+
+
+def test_r002_fires_on_u64_literal_mix():
+    assert _rules_of(_live(BAD_R002_LITERAL, select=["R002"])) == {"R002"}
+
+
+def test_r002_fires_on_narrowing_cast():
+    assert _rules_of(_live(BAD_R002_NARROW, select=["R002"])) == {"R002"}
+
+
+def test_r002_fires_on_jnp_64bit_dtype():
+    # with x64 disabled jnp.uint64 silently produces 32-bit values
+    assert _rules_of(_live(BAD_R002_JNP64, select=["R002"])) == {"R002"}
+
+
+def test_r002_quiet_on_typed_constants_and_masked_narrowing():
+    assert _live(GOOD_R002, select=["R002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R003 python control flow on traced values
+# ---------------------------------------------------------------------------
+
+BAD_R003 = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def relu_or_neg(x):
+    if x.sum() > 0:
+        return x
+    return -x
+"""
+
+GOOD_R003 = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def relu_or_neg(x, *, flip: bool = False):
+    if flip:  # static kwarg: fine
+        x = -x
+    return jnp.where(x > 0, x, -x)
+"""
+
+
+def test_r003_fires_on_traced_branch():
+    assert _rules_of(_live(BAD_R003, select=["R003"])) == {"R003"}
+
+
+def test_r003_quiet_on_static_branch_and_where():
+    assert _live(GOOD_R003, select=["R003"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R004 unsynced benchmark timing
+# ---------------------------------------------------------------------------
+
+BAD_R004 = """
+import time
+import jax
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    out = fn(x)
+    dt = time.perf_counter() - t0
+    return out, dt
+"""
+
+GOOD_R004 = """
+import time
+import jax
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(x))
+    dt = time.perf_counter() - t0
+    return out, dt
+"""
+
+
+def test_r004_fires_on_unsynced_window():
+    assert _rules_of(_live(BAD_R004, select=["R004"])) == {"R004"}
+
+
+def test_r004_quiet_when_blocked_until_ready():
+    assert _live(GOOD_R004, select=["R004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R005 jit-cache hazards
+# ---------------------------------------------------------------------------
+
+BAD_R005_LOOP = """
+import jax
+
+def run(xs):
+    outs = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2)
+        outs.append(f(x))
+    return outs
+"""
+
+BAD_R005_FACTORY = """
+import jax
+
+def make_step(scale):
+    return jax.jit(lambda v: v * scale)
+"""
+
+GOOD_R005 = """
+import functools
+import jax
+
+@functools.lru_cache(maxsize=8)
+def make_step(scale):
+    return jax.jit(lambda v: v * scale)
+
+step = jax.jit(lambda v: v * 2)  # module-level: compiled once
+"""
+
+
+def test_r005_fires_on_jit_in_loop():
+    assert _rules_of(_live(BAD_R005_LOOP, select=["R005"])) == {"R005"}
+
+
+def test_r005_fires_on_uncached_factory():
+    assert _rules_of(_live(BAD_R005_FACTORY, select=["R005"])) == {"R005"}
+
+
+def test_r005_quiet_on_cached_factory_and_module_jit():
+    assert _live(GOOD_R005, select=["R005"]) == []
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics: suppressions, syntax errors, CLI exit codes
+# ---------------------------------------------------------------------------
+
+SUPPRESSED = """
+import jax
+import numpy as np
+
+@jax.jit
+def step(x):
+    return np.asarray(x)  # repro: noqa[R001] parity check reads back on host
+"""
+
+SUPPRESSED_OTHER_RULE = """
+import jax
+import numpy as np
+
+@jax.jit
+def step(x):
+    return np.asarray(x)  # repro: noqa[R004]
+"""
+
+
+def test_noqa_downgrades_but_keeps_the_finding():
+    findings = analyze_source(SUPPRESSED, select=["R001"])
+    assert len(findings) == 1
+    assert findings[0].suppressed
+
+
+def test_noqa_for_a_different_rule_does_not_apply():
+    findings = analyze_source(SUPPRESSED_OTHER_RULE, select=["R001"])
+    assert [f.suppressed for f in findings] == [False]
+
+
+def test_bare_noqa_suppresses_every_rule():
+    src = SUPPRESSED.replace("noqa[R001] parity check reads back on host",
+                             "noqa")
+    assert all(f.suppressed for f in analyze_source(src))
+
+
+def test_syntax_error_becomes_e999():
+    findings = analyze_source("def f(:\n    pass\n")
+    assert [f.rule for f in findings] == ["E999"]
+
+
+def test_rule_pack_is_complete():
+    assert set(all_rules()) == {"R001", "R002", "R003", "R004", "R005"}
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_R001)
+    good = tmp_path / "good.py"
+    good.write_text(GOOD_R001)
+    assert run_cli([str(good)]) == 0
+    assert run_cli([str(bad)]) == 1
+    out = capsys.readouterr()
+    assert "R001" in out.out
+    assert run_cli([str(bad), "--select", "R004"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# self-hosting gate: the repo's own hot-path packages stay finding-free
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pkg", ["core", "kernels", "streaming"])
+def test_self_hosting_hot_paths_are_clean(pkg):
+    findings = analyze_paths([os.path.join(SRC, pkg)])
+    live = [f.format() for f in findings if not f.suppressed]
+    assert live == [], "\n".join(live)

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import blocks, hdb, pairs, u64, baselines
+from repro.core import blocks, hdb, pairs, baselines
 from repro.core.blocks import ColumnBlocking, TokenColumn
 from repro.data import synthetic, metrics
 

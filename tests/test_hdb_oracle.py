@@ -10,7 +10,6 @@ max-keys guards, the oversize-key cap).
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _propcheck import given, settings, st
 
 from repro.core import blocks, hdb, oracle
@@ -79,7 +78,6 @@ def test_jax_matches_oracle_adversarial_overlaps():
 
 def test_jax_matches_oracle_with_max_keys_guard():
     n = 128
-    rng = np.random.default_rng(3)
     cols, spec = {}, {}
     for i in range(7):  # 7 over-sized binary partitions -> guard fires at 6
         v = ((np.arange(n, dtype=np.uint32) >> i) & 1) + 10 * i

@@ -7,10 +7,10 @@ import pytest
 from repro.kernels.minhash import minhash
 from repro.kernels.minhash.ref import minhash_ref
 from repro.kernels.hash64 import combine64, mix64_bulk
-from repro.kernels.hash64.ref import combine64_ref, mix64_ref
+from repro.kernels.hash64.ref import combine64_ref
 from repro.kernels.cms import cms_update
 from repro.kernels.cms.ref import cms_update_ref
-from repro.core import sketches, hashing, u64
+from repro.core import sketches, hashing
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """MinHash / LSH tests incl. the statistical Jaccard property (paper Fig 1a)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import minhash
 from repro.data import synthetic

@@ -7,6 +7,8 @@ randomized block layouts. The triangular decode kernel is additionally
 checked against the float64 closed-form oracle at the int32 contract
 boundary (n = MAX_BLOCK_N).
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -156,8 +158,10 @@ def test_tri_decode_matches_oracle_at_boundaries(n):
     ri, rj = pairs_ref.tri_decode_ref(t, n_arr)
     # ref must satisfy the bitmap identity b(i,j,n) == t
     np.testing.assert_array_equal(pairs.pair_bit_index(ri, rj, n), t)
-    gi, gj = tri_decode_jnp(jnp.asarray(t, jnp.int32),
-                            jnp.asarray(n_arr, jnp.int32))
+    # tri_decode_jnp is a jit-free mirror meant to trace inside
+    # decode_chunk; call it the way its callers do
+    gi, gj = jax.jit(tri_decode_jnp, static_argnames=("steps",))(
+        jnp.asarray(t.astype(np.int32)), jnp.asarray(n_arr.astype(np.int32)))
     np.testing.assert_array_equal(np.asarray(gi), ri)
     np.testing.assert_array_equal(np.asarray(gj), rj)
 
@@ -166,9 +170,11 @@ def test_tri_decode_pallas_matches_jnp_dense():
     rng = np.random.default_rng(0)
     n = rng.integers(2, 300, 4096).astype(np.int64)
     t = (rng.random(4096) * (n * (n - 1) // 2)).astype(np.int64)
-    ji, jj = tri_decode_jnp(jnp.asarray(t, jnp.int32), jnp.asarray(n, jnp.int32))
-    pi, pj = tri_decode_pallas(jnp.asarray(t, jnp.int32).reshape(-1, 128),
-                               jnp.asarray(n, jnp.int32).reshape(-1, 128),
+    t32, n32 = t.astype(np.int32), n.astype(np.int32)
+    ji, jj = jax.jit(tri_decode_jnp, static_argnames=("steps",))(
+        jnp.asarray(t32), jnp.asarray(n32))
+    pi, pj = tri_decode_pallas(jnp.asarray(t32.reshape(-1, 128)),
+                               jnp.asarray(n32.reshape(-1, 128)),
                                interpret=True)
     np.testing.assert_array_equal(np.asarray(pi).reshape(-1), np.asarray(ji))
     np.testing.assert_array_equal(np.asarray(pj).reshape(-1), np.asarray(jj))
@@ -180,13 +186,14 @@ def test_decode_chunk_validity_immune_to_int32_wrap():
     pass the `slots < total` check)."""
     total = 2**31 - 100
     # a single synthetic block table; only validity counting matters here
-    cum = jnp.asarray([0, total], jnp.int32)
-    start = jnp.zeros(1, jnp.int32)
-    size = jnp.asarray([3], jnp.int32)
-    members = jnp.asarray([0, 1, 2], jnp.int32)
+    cum = jnp.asarray(np.array([0, total], np.int32))
+    start = jnp.asarray(np.zeros(1, np.int32))
+    size = jnp.asarray(np.array([3], np.int32))
+    members = jnp.asarray(np.array([0, 1, 2], np.int32))
     base = total - 512
     _, _, _, v = decode_chunk(cum, start, size, members,
-                              jnp.int32(base), jnp.int32(total), chunk=1024)
+                              jax.device_put(np.int32(base)),
+                              jax.device_put(np.int32(total)), chunk=1024)
     v = np.asarray(v)
     assert v.sum() == 512 and v[:512].all() and not v[512:].any()
 
@@ -194,20 +201,22 @@ def test_decode_chunk_validity_immune_to_int32_wrap():
 def test_decode_chunk_masks_out_of_range_slots():
     blk = _random_blocks(1, 4, 6, universe=50)
     total = blk.num_pair_slots
-    cum = jnp.asarray(pairs_ref.cum_pair_counts(blk.size), jnp.int32)
+    cum = jnp.asarray(pairs_ref.cum_pair_counts(blk.size).astype(np.int32))
     a, b, s, v = decode_chunk(
-        cum, jnp.asarray(blk.start, jnp.int32), jnp.asarray(blk.size, jnp.int32),
-        jnp.asarray(blk.members, jnp.int32), jnp.int32(0), jnp.int32(total),
+        cum, jnp.asarray(blk.start.astype(np.int32)),
+        jnp.asarray(blk.size.astype(np.int32)),
+        jnp.asarray(blk.members.astype(np.int32)),
+        jax.device_put(np.int32(0)), jax.device_put(np.int32(total)),
         chunk=1024)
     v = np.asarray(v)
     assert v.sum() == total and not v[total:].any()
 
 
 def test_dedupe_device_pushes_invalid_to_tail():
-    a = jnp.asarray([5, 3, 3, 9], jnp.int32)
-    b = jnp.asarray([6, 4, 4, 11], jnp.int32)
-    s = jnp.asarray([2, 7, 3, 2], jnp.int32)
-    valid = jnp.asarray([True, True, True, False])
+    a = jnp.asarray(np.array([5, 3, 3, 9], np.int32))
+    b = jnp.asarray(np.array([6, 4, 4, 11], np.int32))
+    s = jnp.asarray(np.array([2, 7, 3, 2], np.int32))
+    valid = jnp.asarray(np.array([True, True, True, False]))
     sa, sb, ss, w = dedupe_device(a, b, s, valid)
     w = np.asarray(w)
     assert w.sum() == 2
@@ -275,8 +284,10 @@ def test_pair_route_owner_matches_numpy_mirror():
     a = rng.integers(0, 1 << 23, 4096).astype(np.int32)
     b = rng.integers(0, 1 << 23, 4096).astype(np.int32)
     valid = rng.random(4096) < 0.9
-    got = np.asarray(pair_route_owner(jnp.asarray(a), jnp.asarray(b),
-                                      jnp.asarray(valid), 8))
+    # pair_route_owner is jit-free by contract (traces inside shard_map);
+    # call it through jit like its callers do
+    route = jax.jit(functools.partial(pair_route_owner, n_shards=8))
+    got = np.asarray(route(jnp.asarray(a), jnp.asarray(b), jnp.asarray(valid)))
     want = np.where(valid, pairs_ref.np_pair_route_owner(a, b, 8), 8)
     np.testing.assert_array_equal(got, want)
     # owners must be well spread (splitmix64 avalanche)
@@ -292,7 +303,8 @@ def test_dedupe_packed_device_matches_host():
     valid = rng.random(2048) < 0.8
     hi, lo = pack_sort_words(jnp.asarray(a), jnp.asarray(b), jnp.asarray(s),
                              jnp.asarray(valid))
-    shi, slo, winner = dedupe_packed_device(hi, lo)
+    # dedupe_packed_device is jit-free by contract; jit it like callers do
+    shi, slo, winner = jax.jit(dedupe_packed_device)(hi, lo)
     w = np.asarray(winner)
     words = ((np.asarray(shi).astype(np.uint64) << np.uint64(32))
              | np.asarray(slo).astype(np.uint64))[w]
@@ -394,17 +406,18 @@ def test_routed_decode_validity_at_int32_slot_edge_per_shard_bases():
     n_shards, chunk = 8, 1024
     per_round = n_shards * chunk
     total = 2**31 - 1 - per_round  # guard-admitted maximum
-    cum = jnp.asarray([0, total], jnp.int32)
-    start = jnp.zeros(1, jnp.int32)
-    size = jnp.asarray([3], jnp.int32)
-    members = jnp.asarray([0, 1, 2], jnp.int32)
+    cum = jnp.asarray(np.array([0, total], np.int32))
+    start = jnp.asarray(np.zeros(1, np.int32))
+    size = jnp.asarray(np.array([3], np.int32))
+    members = jnp.asarray(np.array([0, 1, 2], np.int32))
     r0 = (total // per_round) * per_round
     for shard in range(n_shards):
         base = r0 + shard * chunk
         assert base + chunk <= 2**31 - 1  # the invariant the guard enforces
         live = max(0, min(chunk, total - base))
         _, _, _, v = decode_chunk(cum, start, size, members,
-                                  jnp.int32(base), jnp.int32(total),
+                                  jax.device_put(np.int32(base)),
+                                  jax.device_put(np.int32(total)),
                                   chunk=chunk)
         v = np.asarray(v)
         assert v.sum() == live and v[:live].all() and not v[live:].any(), shard

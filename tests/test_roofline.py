@@ -7,7 +7,6 @@ These pin the two facts the roofline report depends on:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import HloCostModel, analyze
 

@@ -1,10 +1,9 @@
 """Property tests for sort/segment reductions vs a numpy oracle."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _propcheck import given, settings, st
 
-from repro.core import segments, u64, hashing
+from repro.core import segments, hashing
 
 
 def _to_u64(xs):

@@ -1,10 +1,9 @@
 """Property tests for the CMS and Bloom sketches."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _propcheck import given, settings, st
 
-from repro.core import sketches, u64, hashing
+from repro.core import sketches, hashing
 
 
 def _keys_from_ints(xs):

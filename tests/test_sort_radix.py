@@ -9,6 +9,8 @@ histogram/rank kernel (interpret mode here) must match the fused-jnp
 mirror bit-for-bit, and the ``sort_backend`` knob must leave every
 dedupe result unchanged across comparator/radix on all drivers.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -88,7 +90,7 @@ def test_radix_full_capacity_limb_pairs(use_kernel):
     b = np.asarray([rid_max, rid_max, 1, rid_max, rid_max], np.int32)
     s = np.asarray([2, 65535, 65535, 2, 3], np.int32)
     hi, lo = pack_sort_words(jnp.asarray(a), jnp.asarray(b), jnp.asarray(s),
-                             jnp.ones(5, bool))
+                             jnp.asarray(np.ones(5, bool)))
     base = _join(hi, lo)
     rng = np.random.default_rng(2)
     for n in (1024, 1000):  # tile-exact and padded
@@ -190,8 +192,12 @@ def test_dedupe_packed_device_radix_matches_comparator():
                              jnp.asarray(valid))
     outs = {}
     for sb in ("comparator", "radix"):
-        shi, slo, win = dedupe_packed_device(
-            hi, lo, sort_backend=sb, n_passes=radix_passes_for(600))
+        # dedupe_packed_device is jit-free by contract ("for use INSIDE
+        # shard_map"); call it through jit, as its real callers do
+        fn = jax.jit(functools.partial(
+            dedupe_packed_device, sort_backend=sb,
+            n_passes=radix_passes_for(600)))
+        shi, slo, win = fn(hi, lo)
         outs[sb] = _join(shi, slo)[np.asarray(win)]
     np.testing.assert_array_equal(outs["radix"], outs["comparator"])
     ga, gb, gs = unpack_words_host(np.sort(outs["radix"]))

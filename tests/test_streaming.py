@@ -6,9 +6,9 @@ equal (sorted canonical pairs, including largest-block-wins provenance)
 to one batch ``hashed_dynamic_blocking`` + ``dedupe_pairs`` run on the
 union — for randomized K, key layouts and ``max_block_size``.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _propcheck import given, settings, st
 
@@ -312,11 +312,14 @@ def test_np_mirrors_are_bit_exact():
     cfg = sketches.CMSConfig(4, 1 << 12)
     hi = (k64 >> np.uint64(32)).astype(np.uint32)
     lo = (k64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    jidx = np.asarray(sketches.cms_indices(cfg, (jnp.asarray(hi),
-                                                 jnp.asarray(lo))))
+    # cms_indices / fingerprint_rid are jit-free by contract (they trace
+    # inside jitted callers); eager calls would upload their hash
+    # constants implicitly, so call them through jit like callers do
+    jidx = np.asarray(jax.jit(sketches.cms_indices, static_argnums=0)(
+        cfg, (jnp.asarray(hi), jnp.asarray(lo))))
     np.testing.assert_array_equal(jidx, sketches.np_cms_indices(cfg, k64))
     rid = rng.integers(0, 1 << 31, 500).astype(np.int32)
-    fh, fl = hashing.fingerprint_rid(jnp.asarray(rid))
+    fh, fl = jax.jit(hashing.fingerprint_rid)(jnp.asarray(rid))
     want = ((np.asarray(fh).astype(np.uint64) << np.uint64(32))
             | np.asarray(fl))
     np.testing.assert_array_equal(want, hashing.np_fingerprint_rid(rid))

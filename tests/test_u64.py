@@ -1,8 +1,6 @@
 """Property tests: u64 limb arithmetic must match python int semantics."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _propcheck import given, settings, st
 
 from repro.core import u64, hashing
