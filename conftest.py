@@ -17,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
 # device_get conversions the drivers are built around.
 TRANSFER_GUARDED_MODULES = {
     "test_pairs_engine",
+    "test_serving",
     "test_sort_radix",
     "test_streaming",
 }

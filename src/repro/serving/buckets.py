@@ -1,0 +1,63 @@
+"""Padded-bucket batching: a power-of-two shape ladder for probe batches.
+
+The jitted classify/intersect walk specializes on array shapes, so feeding
+it raw collated batch sizes would compile once per distinct size — an
+unbounded cache under mixed traffic. Padding every batch up to the next
+ladder rung bounds the compiled-variant count at O(log max_batch), and the
+walk is row-local (every per-row decision in ``rough_classify`` /
+``intersect_keys`` / the probe survivor dedupe depends only on that row),
+so sentinel-key, all-invalid padding rows cannot change a real row's
+result — the serving batching-invariance property test pins this
+bit-for-bit against one-at-a-time queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+_SENT32 = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """Power-of-two batch-row buckets starting at ``min_bucket``."""
+
+    min_bucket: int = 8
+
+    def bucket(self, n: int) -> int:
+        """Smallest rung >= max(n, min_bucket)."""
+        p = max(int(self.min_bucket), 1)
+        while p < n:
+            p *= 2
+        return p
+
+    def rungs(self, max_rows: int) -> List[int]:
+        """Every rung the ladder can emit for batches up to ``max_rows``."""
+        out = [self.bucket(0)]
+        while out[-1] < max_rows:
+            out.append(out[-1] * 2)
+        return out
+
+
+def pad_probe_rows(keys: np.ndarray, valid: np.ndarray,
+                   rows: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a (q, K, 2)/(q, K) probe key matrix to ``rows`` rows.
+
+    Padding rows are all-sentinel keys with ``valid=False`` — the same
+    canonical dead-row encoding ``build_keys`` and the DeltaBlocker use —
+    so they match nothing and survive nothing in the walk.
+    """
+    keys = np.asarray(keys, np.uint32)
+    valid = np.asarray(valid, bool)
+    q, k = valid.shape
+    if rows < q:
+        raise ValueError(f"bucket {rows} smaller than batch {q}")
+    if rows == q:
+        return keys, valid
+    out_k = np.full((rows, k, 2), _SENT32, np.uint32)
+    out_v = np.zeros((rows, k), bool)
+    out_k[:q] = keys
+    out_v[:q] = valid
+    return out_k, out_v

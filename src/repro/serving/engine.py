@@ -9,6 +9,7 @@ what production TPU serving stacks do to avoid recompiles.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional
 
 import jax
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from .scheduler import drain
 
 
 @dataclasses.dataclass
@@ -96,8 +98,12 @@ class ServingEngine:
                 self.slot_req[slot] = None
 
     def run(self, max_steps: int = 10_000) -> List[Result]:
-        steps = 0
-        while self.busy and steps < max_steps:
-            self.step()
-            steps += 1
+        """Drain the queue; warn if ``max_steps`` truncates the drain."""
+        drain(self, max_steps)
+        if self.busy:
+            live = sum(r is not None for r in self.slot_req)
+            warnings.warn(
+                f"ServingEngine.run stopped at max_steps={max_steps} with "
+                f"{len(self.queue)} queued and {live} in-flight requests; "
+                "call run() again to finish", RuntimeWarning, stacklevel=2)
         return self.results

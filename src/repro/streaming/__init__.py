@@ -49,12 +49,15 @@ streaming property tests assert it pair-for-pair.
 Front-end
 ---------
 
-``StreamingEngine`` wraps a store + delta blocker behind a slot scheduler
-modeled on ``serving/engine.py``: submissions queue host-side, ``step()``
-drains one fixed-size micro-batch (padded, so ingest batches and query
-probes of any size reuse one compiled step family without recompiles),
-and results carry the per-ingest pair deltas, optionally matcher-scored
-straight from the device pair buffers.
+``StreamingEngine`` wraps a store + delta blocker behind the shared slot
+scheduler (``serving/scheduler.py``, also driving the LM engine):
+submissions queue host-side, ``step()`` drains one fixed-size micro-batch
+(padded, so ingest batches and query probes of any size reuse one
+compiled step family without recompiles), and results carry the
+per-ingest pair deltas, optionally matcher-scored straight from the
+device pair buffers. The service-grade front-end — admission lanes,
+deadlines/backpressure, padded-bucket probe batching, per-tenant stores,
+metrics — is ``repro.serving.DedupeService`` (docs/SERVING.md).
 """
 from .store import BlockStore, LevelState  # noqa: F401
 from .delta import DeltaBlocker, IngestReport, QueryResult  # noqa: F401

@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +64,21 @@ def _pow2(n: int, floor: int = 256) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def probe_jit_cache_sizes() -> dict:
+    """Compiled-variant counts of the shared jitted probe-walk steps.
+
+    The serving bench's recompile guard: after warmup the padded-bucket
+    ladder must keep these counts constant across batch sizes. Returns -1
+    per entry if the jax version doesn't expose ``_cache_size``.
+    """
+    out = {}
+    for name, fn in (("rough_classify", _rough_classify),
+                     ("intersect_keys", _intersect_keys)):
+        size = getattr(fn, "_cache_size", None)
+        out[name] = int(size()) if callable(size) else -1
+    return out
 
 
 @jax.jit
@@ -635,7 +650,8 @@ class DeltaBlocker:
         return surv
 
     def query_keys(self, keys_packed, valid,
-                   include_probe: bool = False) -> List[QueryResult]:
+                   include_probe: bool = False,
+                   n_real: Optional[int] = None) -> List[QueryResult]:
         """Candidate ids per probe record (serving-style, read-only).
 
         Walks the store's levels with the probe's key matrix: accepted
@@ -643,6 +659,13 @@ class DeltaBlocker:
         landing on surviving over-sized blocks are pairwise-intersected
         (same jitted ``intersect_keys``) and the walk descends. A query
         never mutates the store.
+
+        ``n_real`` is the serving batcher's padding contract: only the
+        first ``n_real`` rows get a ``QueryResult`` (the rest are padding
+        the caller added to hit a bucket shape). Every per-row decision in
+        the walk is row-local and ``levels_walked`` is counted per row, so
+        a row's result is bit-identical no matter what rows it is batched
+        or padded with.
 
         ``include_probe=False`` keeps the historical behavior: the
         probe's own (absent) +1 on matched block sizes is NOT simulated.
@@ -669,14 +692,16 @@ class DeltaBlocker:
         size_probe: List[np.ndarray] = []
         size_val: List[np.ndarray] = []
         hits = np.zeros(q, np.int64)
-        levels_walked = 0
+        # per-row: a row stops walking when ITS keys die, independent of
+        # batch mates — required for batching invariance of the stat
+        levels_walked = np.zeros(q, np.int64)
         for lev in range(cfg.max_iterations):
             state = self.store.levels[lev]
             if state is None or state.num_rows == 0 or keys.shape[1] == 0:
                 break
             if not valid.any():
                 break
-            levels_walked += 1
+            levels_walked += valid.any(axis=1)
             k64 = pack_key64(keys)
             idx = sketches.np_cms_indices(cfg.cms, k64)
             est = None
@@ -760,10 +785,10 @@ class DeltaBlocker:
             sp = np.zeros((0,), np.int64)
             sv = np.zeros((0,), np.int64)
         out = []
-        for pi in range(q):
+        for pi in range(q if n_real is None else min(n_real, q)):
             out.append(QueryResult(
                 candidates=np.unique(cr[cp == pi]),
                 n_blocks_hit=int(hits[pi]),
-                levels_walked=levels_walked,
+                levels_walked=int(levels_walked[pi]),
                 block_sizes=np.sort(sv[sp == pi])))
         return out

@@ -13,12 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from ..core import blocks as blocks_mod
 from ..core import hdb as hdb_mod
+from ..serving.scheduler import collate_fifo, drain
 from .delta import DeltaBlocker, IngestReport, QueryResult
 from .store import BlockStore
 
@@ -191,27 +193,32 @@ class StreamingEngine:
         return np.asarray(keys), np.asarray(valid)
 
     def _pad_batch(self, batches: List[tuple], slots: int) -> List[tuple]:
-        """Coalesce queued (uid, batch) entries up to one slot budget."""
-        take: List[tuple] = []
-        total = 0
-        while batches and total + batches[0][1].num_records <= slots:
-            total += batches[0][1].num_records
-            take.append(batches.pop(0))
-        if not take and batches:   # oversized single batch: pass through
-            take.append(batches.pop(0))
-        return take
+        """Coalesce queued (uid, batch) entries up to one slot budget.
+
+        Skip-scan collation (``serving.scheduler.collate_fifo``): an entry
+        too big for the remaining budget no longer blocks smaller entries
+        queued behind it; per-uid FIFO holds and an oversized entry still
+        passes through alone once it reaches the head.
+        """
+        return collate_fifo(batches, slots,
+                            size_fn=lambda e: e[1].num_records,
+                            group_fn=lambda e: e[0])
+
+    @staticmethod
+    def _merge_columns(taken: List[tuple]) -> RecordBatch:
+        merged = {name: (np.concatenate([b.columns[name][0] for _, b in taken]),
+                         np.concatenate([b.columns[name][1] for _, b in taken]))
+                  for name in taken[0][1].columns}
+        return RecordBatch(merged, sum(b.num_records for _, b in taken))
 
     def step(self) -> None:
         """Process one ingest micro-batch and one query batch, if queued."""
         ingest = self._pad_batch(self._ingest_queue, self.ingest_slots)
         if ingest:
             uids = [u for u, _ in ingest]
-            merged = {name: (np.concatenate([b.columns[name][0] for _, b in ingest]),
-                             np.concatenate([b.columns[name][1] for _, b in ingest]))
-                      for name in ingest[0][1].columns}
-            batch = RecordBatch(merged, sum(b.num_records for _, b in ingest))
+            batch = self._merge_columns(ingest)
             if self.matcher_cfg is not None:
-                self.column_cache.append(merged)
+                self.column_cache.append(batch.columns)
             first_rid = self.store.num_records
             keys, valid = self._build_keys(batch)
             report = self.blocker.ingest_keys(keys, valid)
@@ -223,10 +230,7 @@ class StreamingEngine:
                 match_scores=scores))
         queries = self._pad_batch(self._query_queue, self.query_slots)
         if queries:
-            merged = {name: (np.concatenate([b.columns[name][0] for _, b in queries]),
-                             np.concatenate([b.columns[name][1] for _, b in queries]))
-                      for name in queries[0][1].columns}
-            batch = RecordBatch(merged, sum(b.num_records for _, b in queries))
+            batch = self._merge_columns(queries)
             keys, valid = self._build_keys(batch)
             results = self.blocker.query_keys(keys, valid)
             off = 0
@@ -235,11 +239,22 @@ class StreamingEngine:
                     self.probe_results.append(ProbeResult(uid=uid, result=r))
                 off += qb.num_records
 
+    @property
+    def queue_depth(self) -> int:
+        """Submissions still queued across both lanes."""
+        return len(self._ingest_queue) + len(self._query_queue)
+
     def run(self, max_steps: int = 10_000):
-        steps = 0
-        while self.busy and steps < max_steps:
-            self.step()
-            steps += 1
+        """Drain the queues; warn if ``max_steps`` truncates the drain (the
+        returned results would otherwise be indistinguishable from a
+        completed run — check ``queue_depth``/``busy`` and call ``run()``
+        again to finish)."""
+        drain(self, max_steps)
+        if self.busy:
+            warnings.warn(
+                f"StreamingEngine.run stopped at max_steps={max_steps} with "
+                f"{self.queue_depth} submissions still queued; call run() "
+                "again to finish the drain", RuntimeWarning, stacklevel=2)
         return self.ingest_results, self.probe_results
 
     # ------------------------------------------------------------------

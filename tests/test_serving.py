@@ -1,0 +1,324 @@
+"""DedupeService: batching invariance, lanes, backpressure, fair share,
+metrics contract, and the shared slot-scheduler collation."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from test_streaming import _random_keys
+
+from repro.core import hdb
+from repro.data import synthetic
+from repro.serving import BackpressureError, DedupeService, ServiceConfig
+from repro.serving.buckets import BucketLadder, pad_probe_rows
+from repro.serving.metrics import Histogram, Metrics
+from repro.serving.scheduler import collate_fifo
+from repro.streaming import RecordBatch, StreamingEngine
+from repro.streaming.delta import probe_jit_cache_sizes
+
+_CFG = hdb.HDBConfig(max_block_size=8, max_iterations=5, max_oversize_keys=6,
+                     cms_width=1 << 10)
+
+
+def _assert_result_equal(got, want):
+    np.testing.assert_array_equal(got.candidates, want.candidates)
+    np.testing.assert_array_equal(got.block_sizes, want.block_sizes)
+    assert got.n_blocks_hit == want.n_blocks_hit
+    assert got.levels_walked == want.levels_walked
+
+
+# ---------------------------------------------------------------------------
+# batching invariance (the tentpole correctness property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       batch=st.sampled_from([1, 2, 5, 7, 16]),
+       include_probe=st.sampled_from([False, True]))
+def test_micro_batched_probes_match_one_at_a_time(seed, batch, include_probe):
+    """Service responses (collated across requests, padded to bucket rungs)
+    are bit-identical to solo DeltaBlocker.query_keys calls — candidates,
+    block sizes, hit and level counts — in both include_probe modes.
+    probe_slots=16 with min_bucket=4 makes the collated batches cross
+    several ladder rungs (4, 8, 16) across draws."""
+    rng = np.random.default_rng(seed)
+    keys, valid = _random_keys(rng, n=160, k=6, card=18)
+    base_k, base_v = keys[:120], valid[:120]
+    probe_k, probe_v = keys[120:], valid[120:]
+    svc = DedupeService(_CFG, ServiceConfig(probe_slots=16, min_bucket=4))
+    tenant = svc.add_tenant("t")
+    svc.submit_ingest("t", base_k, base_v)
+    svc.run()
+    uids = []
+    for off in range(0, len(probe_k), batch):
+        uids.append(svc.submit_probe(
+            "t", probe_k[off:off + batch], probe_v[off:off + batch],
+            include_probe=include_probe))
+    svc.run()
+    got = {r.uid: r for r in svc.probe_responses}
+    row = 0
+    some_candidates = False
+    for uid in uids:
+        resp = got[uid]
+        assert resp.status == "ok"
+        for qr in resp.results:
+            want = tenant.blocker.query_keys(
+                probe_k[row:row + 1], probe_v[row:row + 1],
+                include_probe=include_probe)[0]
+            _assert_result_equal(qr, want)
+            some_candidates |= len(qr.candidates) > 0
+            row += 1
+    assert row == len(probe_k)       # every probe row answered exactly once
+    assert some_candidates           # the draw actually exercised the walk
+
+
+def test_pad_probe_rows_and_ladder():
+    ladder = BucketLadder(min_bucket=8)
+    assert [ladder.bucket(n) for n in (0, 1, 8, 9, 64, 65)] == [
+        8, 8, 8, 16, 64, 128]
+    assert ladder.rungs(64) == [8, 16, 32, 64]
+    rng = np.random.default_rng(0)
+    keys, valid = _random_keys(rng, n=5, k=4, card=9)
+    pk, pv = pad_probe_rows(keys, valid, 8)
+    assert pk.shape == (8, 4, 2) and pv.shape == (8, 4)
+    np.testing.assert_array_equal(pk[:5], keys)
+    np.testing.assert_array_equal(pv[:5], valid)
+    assert not pv[5:].any()
+    assert (pk[5:] == np.uint32(0xFFFFFFFF)).all()
+    with pytest.raises(ValueError):
+        pad_probe_rows(keys, valid, 4)
+
+
+# ---------------------------------------------------------------------------
+# lanes, backpressure, deadlines, fair share
+# ---------------------------------------------------------------------------
+
+
+def test_probes_never_stall_behind_ingest_queue():
+    rng = np.random.default_rng(3)
+    keys, valid = _random_keys(rng, n=200, k=6, card=20)
+    svc = DedupeService(_CFG, ServiceConfig(probe_slots=8, ingest_slots=32))
+    svc.add_tenant("t")
+    svc.submit_ingest("t", keys[:64], valid[:64])
+    svc.run()
+    for off in range(64, 192, 32):   # 4 queued ledger syncs
+        svc.submit_ingest("t", keys[off:off + 32], valid[off:off + 32])
+    uid = svc.submit_probe("t", keys[:4], valid[:4])
+    svc.step()   # read lane served in the same step, not after the backlog
+    assert any(r.uid == uid for r in svc.probe_responses)
+    assert svc.queue_depths()["write"] > 0
+
+
+def test_backpressure_rejects_full_lanes():
+    rng = np.random.default_rng(1)
+    keys, valid = _random_keys(rng, n=40, k=6, card=12)
+    svc = DedupeService(_CFG, ServiceConfig(max_read_queue=2,
+                                            max_write_queue=1))
+    svc.add_tenant("t")
+    svc.submit_ingest("t", keys[:20], valid[:20])
+    with pytest.raises(BackpressureError):
+        svc.submit_ingest("t", keys[20:30], valid[20:30])
+    svc.run()
+    svc.submit_probe("t", keys[:1], valid[:1])
+    svc.submit_probe("t", keys[1:2], valid[1:2])
+    with pytest.raises(BackpressureError):
+        svc.submit_probe("t", keys[2:3], valid[2:3])
+    assert svc.snapshot()["counters"]["rejected_total"] == 2
+    svc.run()
+    assert all(r.status == "ok" for r in svc.probe_responses)
+
+
+def test_expired_probe_is_shed_with_explicit_response():
+    rng = np.random.default_rng(2)
+    keys, valid = _random_keys(rng, n=30, k=6, card=10)
+    svc = DedupeService(_CFG, ServiceConfig())
+    svc.add_tenant("t")
+    svc.submit_ingest("t", keys[:20], valid[:20])
+    svc.run()
+    expired = svc.submit_probe("t", keys[20:22], valid[20:22],
+                               deadline_s=-1.0)   # already past its deadline
+    live = svc.submit_probe("t", keys[22:24], valid[22:24])
+    svc.run()
+    by_uid = {r.uid: r for r in svc.probe_responses}
+    assert by_uid[expired].status == "expired"
+    assert by_uid[expired].results == []
+    assert by_uid[live].status == "ok" and len(by_uid[live].results) == 2
+    counters = svc.snapshot()["counters"]
+    assert counters["shed_total"] == 1
+    assert counters["probe_requests_total"] == 1   # shed rows never walked
+
+
+def test_tenant_isolation_and_fair_share():
+    rng = np.random.default_rng(5)
+    keys, valid = _random_keys(rng, n=120, k=6, card=15)
+    svc = DedupeService(_CFG, ServiceConfig(probe_slots=4))
+    svc.add_tenant("a")
+    svc.add_tenant("b")
+    svc.submit_ingest("a", keys[:50], valid[:50])
+    svc.submit_ingest("b", keys[50:100], valid[50:100])
+    svc.run()
+    assert svc.tenant("a").store.num_records == 50
+    assert svc.tenant("b").store.num_records == 50
+    ua = svc.submit_probe("a", keys[:2], valid[:2])
+    ub = svc.submit_probe("b", keys[:2], valid[:2])
+    for _ in range(6):   # flood a's read lane behind ua
+        svc.submit_probe("a", keys[:4], valid[:4])
+    svc.step()
+    svc.step()   # round-robin: b is served on the second step, not last
+    done = {r.uid for r in svc.probe_responses}
+    assert ua in done and ub in done
+    # identical probe, isolated stores: answers come from each tenant's own
+    # rows and match that tenant's solo blocker exactly
+    by_uid = {r.uid: r for r in svc.probe_responses}
+    for name, uid in (("a", ua), ("b", ub)):
+        want = svc.tenant(name).blocker.query_keys(keys[:2], valid[:2])
+        for qr, w in zip(by_uid[uid].results, want):
+            _assert_result_equal(qr, w)
+
+
+def test_mixed_include_probe_modes_keep_fifo_and_split_batches():
+    rng = np.random.default_rng(8)
+    keys, valid = _random_keys(rng, n=60, k=6, card=12)
+    svc = DedupeService(_CFG, ServiceConfig(probe_slots=16))
+    tenant = svc.add_tenant("t")
+    svc.submit_ingest("t", keys[:40], valid[:40])
+    svc.run()
+    u1 = svc.submit_probe("t", keys[40:42], valid[40:42], include_probe=False)
+    u2 = svc.submit_probe("t", keys[42:44], valid[42:44], include_probe=True)
+    u3 = svc.submit_probe("t", keys[44:46], valid[44:46], include_probe=False)
+    svc.run()
+    by_uid = {r.uid: r for r in svc.probe_responses}
+    for uid, off, mode in ((u1, 40, False), (u2, 42, True), (u3, 44, False)):
+        want = tenant.blocker.query_keys(keys[off:off + 2], valid[off:off + 2],
+                                         include_probe=mode)
+        for qr, w in zip(by_uid[uid].results, want):
+            _assert_result_equal(qr, w)
+
+
+# ---------------------------------------------------------------------------
+# metrics contract
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_contract_and_bucket_ladder_stability():
+    rng = np.random.default_rng(9)
+    keys, valid = _random_keys(rng, n=100, k=6, card=15)
+    svc = DedupeService(_CFG, ServiceConfig(probe_slots=8, min_bucket=4))
+    svc.add_tenant("t")
+    svc.submit_ingest("t", keys[:60], valid[:60])
+    svc.run()
+    for rep in range(5):
+        svc.submit_probe("t", keys[60 + 4 * rep:64 + 4 * rep],
+                         valid[60 + 4 * rep:64 + 4 * rep])
+        svc.run()
+    snap = svc.snapshot()
+    counters = snap["counters"]
+    assert counters["probe_requests_total"] == 5
+    assert counters["probe_rows_total"] == 20
+    assert counters["probe_batches_total"] == 5
+    assert counters["ingest_rows_total"] == 60
+    # one ladder rung (4 rows -> bucket 4), compiled exactly once
+    assert counters["bucket_compiles_total"] == 1
+    lat = snap["histograms"]["probe_latency_s"]
+    assert lat["count"] == 5
+    assert 0 <= lat["min"] <= lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"]
+    occ = snap["histograms"]["batch_occupancy"]
+    assert occ["count"] == 5 and occ["max"] == 1.0   # 4 rows in bucket 4
+    gauges = snap["gauges"]
+    assert gauges["read_queue_depth"] == 0
+    assert gauges["write_queue_depth"] == 0
+    assert gauges["tenants"] == 1
+    # jit cache: repeating warmed shapes adds no compiled variants
+    cache_after_warm = probe_jit_cache_sizes()
+    for rep in range(3):
+        svc.submit_probe("t", keys[80 + 4 * rep:84 + 4 * rep],
+                         valid[80 + 4 * rep:84 + 4 * rep])
+        svc.run()
+    assert probe_jit_cache_sizes() == cache_after_warm
+    assert svc.snapshot()["counters"]["bucket_compiles_total"] == 1
+
+
+def test_histogram_percentiles_and_reset():
+    h = Histogram.log(1e-6, 100.0, per_decade=5)
+    for v in (0.001, 0.001, 0.001, 0.001, 0.5):
+        h.record(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["min"] == 0.001 and snap["max"] == 0.5
+    assert 0.0005 <= snap["p50"] <= 0.002    # within the 0.001 bin
+    assert snap["p99"] <= 0.5                # clamped to observed max
+    h.reset()
+    assert h.snapshot()["count"] == 0
+    m = Metrics()
+    m.counter("x").inc(3)
+    m.histogram("y", kind="unit").record(0.5)
+    m.reset()
+    snap = m.snapshot(g=1)
+    assert snap["counters"]["x"] == 0
+    assert snap["histograms"]["y"]["count"] == 0
+    assert snap["gauges"]["g"] == 1
+
+
+# ---------------------------------------------------------------------------
+# shared collation + StreamingEngine satellites
+# ---------------------------------------------------------------------------
+
+
+def test_collate_fifo_skip_scan_fixes_head_of_line():
+    queue = [("a", 40), ("b", 100), ("c", 10)]
+    taken = collate_fifo(queue, 64, size_fn=lambda e: e[1],
+                         group_fn=lambda e: e[0])
+    assert [u for u, _ in taken] == ["a", "c"]   # c no longer waits on b
+    assert [u for u, _ in queue] == ["b"]
+    taken = collate_fifo(queue, 64, size_fn=lambda e: e[1],
+                         group_fn=lambda e: e[0])
+    assert [u for u, _ in taken] == ["b"]        # oversized head passes alone
+    assert queue == []
+
+
+def test_collate_fifo_preserves_per_group_order():
+    queue = [("g", 60), ("g", 10), ("g", 2)]
+    taken = collate_fifo(queue, 64, size_fn=lambda e: e[1],
+                         group_fn=lambda e: e[0])
+    # the 2 must not jump the skipped 10 from the same group
+    assert taken == [("g", 60)]
+    assert queue == [("g", 10), ("g", 2)]
+
+
+@dataclasses.dataclass
+class _FakeBatch:
+    num_records: int
+
+
+def test_streaming_engine_pad_batch_skip_scan():
+    eng = StreamingEngine({}, _CFG, ingest_slots=64)
+    u1 = eng.submit_ingest(_FakeBatch(40))
+    u2 = eng.submit_ingest(_FakeBatch(100))
+    u3 = eng.submit_ingest(_FakeBatch(10))
+    taken = eng._pad_batch(eng._ingest_queue, eng.ingest_slots)
+    assert [u for u, _ in taken] == [u1, u3]
+    taken = eng._pad_batch(eng._ingest_queue, eng.ingest_slots)
+    assert [u for u, _ in taken] == [u2]
+    assert eng.queue_depth == 0
+
+
+def test_streaming_engine_run_warns_on_truncated_drain():
+    corpus = synthetic.generate(synthetic.SyntheticSpec(num_entities=30,
+                                                        seed=3))
+    cfg = hdb.HDBConfig(max_block_size=20, max_iterations=4,
+                        cms_width=1 << 10)
+    eng = StreamingEngine(corpus.blocking, cfg, ingest_slots=8)
+    n = min(corpus.num_records, 24)
+    for part in np.array_split(np.arange(n), 3):
+        eng.submit_ingest(RecordBatch.from_corpus(corpus, part))
+    with pytest.warns(RuntimeWarning, match="still queued"):
+        eng.run(max_steps=1)
+    assert eng.busy and eng.queue_depth == 2
+    ingests, _ = eng.run()   # finishing drain: no warning, queue empty
+    assert eng.queue_depth == 0 and not eng.busy
+    assert sum(len(r.uids) for r in ingests) == 3
+    assert eng.store.num_records == n
