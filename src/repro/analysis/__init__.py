@@ -1,15 +1,21 @@
-"""repro.analysis: JAX/Pallas static-analysis pass for this codebase.
+"""repro.analysis: whole-program JAX/Pallas static analysis.
 
-``python -m repro.analysis src benchmarks`` runs the R001-R005 rule pack
-(transfer sanitizer + dtype-contract lint) and exits nonzero on any
-unsuppressed finding. See docs/ANALYSIS.md.
+``python -m repro.analysis src benchmarks`` runs the R001-R009 rule pack
+(transfer sanitizer, dtype/collective/padding/concurrency/kernel
+contract lint) as a two-phase whole-program pass — phase 1 indexes the
+cross-module call graph, phase 2 checks each module with an on-disk
+findings cache — and exits nonzero on any unsuppressed finding. See
+docs/ANALYSIS.md.
 """
 from .engine import (  # noqa: F401
+    AnalysisCache,
     Finding,
     ModuleContext,
     all_rules,
     analyze_file,
     analyze_paths,
     analyze_source,
+    format_github,
     run_cli,
 )
+from .project import Project, module_name_for  # noqa: F401

@@ -1,9 +1,12 @@
 """The R001-R005 rule pack over ``ModuleContext``.
 
 Each rule is a registered ``ModuleContext -> [Finding]`` function.
-Detection is a per-file static approximation tuned to this codebase's
-idioms (see docs/ANALYSIS.md for each rule's exact contract and how to
-suppress with ``# repro: noqa[RULE]``):
+Detection is a static approximation tuned to this codebase's idioms
+(see docs/ANALYSIS.md for each rule's exact contract and how to
+suppress with ``# repro: noqa[RULE]``). Jit reachability is no longer
+per-file: the phase-1 index (``project.Project``) injects the
+cross-module closure into each ``ModuleContext``, so R001/R003 flag a
+helper here that is only jitted from another module:
 
 - R001 host-transfer-in-jit: host calls (``np.*``, ``float``/``int``/
   ``bool``, ``.item()``/``.tolist()``, ``jax.device_get``) applied to

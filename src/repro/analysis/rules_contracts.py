@@ -1,0 +1,695 @@
+"""The R006-R009 contract rule families over ``ModuleContext``.
+
+These rules guard the cross-shard and kernel contracts the R001-R005
+pack cannot see — the ones the paper's headline scale rests on (exact
+``all_to_all`` exchanges, padded fixed-capacity buffers with sentinel
+lanes, the serving admission lanes, Pallas block shapes). Like the base
+pack they are per-idiom static approximations (see docs/ANALYSIS.md for
+the exact contracts and known imprecision):
+
+- R006 collective-contract: literal mesh-axis names used by
+  ``lax.psum``/``all_to_all``/``axis_index``/... (or ``mesh.shape[...]``)
+  must exist in the project's declared mesh-axis universe; ``all_to_all``
+  split extents must divide the shard count when both are static.
+- R007 padding/sentinel-contract: values built by ``np.pad``/``jnp.pad``
+  or ``pad_*`` helpers carry dead lanes and must be masked, sliced, or
+  ``where``-guarded before reductions/compactions; sentinel-filled word
+  buffers must be filtered before ``unpack_*`` calls.
+- R008 serving-concurrency: no blocking call while holding a lock, and
+  no attribute mutated both under a lock and bare (outside ``__init__``)
+  in the same class — the admission-lane state contract.
+- R009 pallas-kernel-shape: ``pallas_call`` grids computed with floor
+  division need a divisibility guard (assert/raise on the remainder, or
+  padding first), and static ref indices inside kernels must stay inside
+  the ref's ``BlockSpec`` block shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import ModuleContext, Finding, dotted_name, register
+from .rules import _scope_nodes
+
+# -- shared expression helpers ---------------------------------------------
+
+_COLLECTIVE_AXIS_ARG = {
+    "psum": 1, "pmax": 1, "pmin": 1, "pmean": 1, "psum_scatter": 1,
+    "all_gather": 1, "all_to_all": 1, "ppermute": 1,
+    "axis_index": 0, "axis_size": 0,
+}
+_REDUCERS = {
+    "sum", "mean", "prod", "min", "max", "amin", "amax", "all", "any",
+    "median", "average", "argmin", "argmax", "count_nonzero", "nonzero",
+    "flatnonzero", "unique", "bincount", "cumsum", "cumprod",
+}
+_MASKISH = ("valid", "mask", "live", "keep", "real")
+_SENTINEL_INTS = {0xFFFFFFFF, 0xFFFFFFFFFFFFFFFF}
+_BLOCKING_ATTRS = {"sleep", "join", "wait", "acquire", "block_until_ready"}
+_QUEUEISH = ("q", "queue")
+_MUTATORS = {
+    "append", "extend", "insert", "add", "remove", "discard", "pop",
+    "popleft", "appendleft", "clear", "update", "inc", "dec", "record",
+    "put", "push", "setdefault",
+}
+
+
+def _lax_op(ctx: ModuleContext, func: ast.AST) -> Optional[str]:
+    """``lax.psum`` / ``jax.lax.psum`` -> "psum", else None."""
+    d = dotted_name(func)
+    if not d or "." not in d:
+        return None
+    root, _, rest = d.partition(".")
+    if root in ctx.lax_aliases and "." not in rest:
+        return rest
+    if root in ctx.jax_aliases and rest.startswith("lax.") \
+            and rest.count(".") == 1:
+        return rest.partition(".")[2]
+    return None
+
+
+def _enclosing_scopes(ctx: ModuleContext, node: ast.AST) -> List[ast.AST]:
+    """Function scopes containing ``node``, innermost first, then module."""
+    out: List[ast.AST] = []
+    cur = ctx.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append(cur)
+        cur = ctx.parents.get(cur)
+    out.append(ctx.tree)
+    return out
+
+
+def _literal_str_list(node: ast.AST) -> Optional[List[str]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append(el.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def _param_default(fn, name: str) -> Optional[ast.AST]:
+    args = fn.args
+    pos = list(args.posonlyargs) + list(args.args)
+    defaults = list(args.defaults)
+    for a, d in zip(pos[len(pos) - len(defaults):], defaults):
+        if a.arg == name:
+            return d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if a.arg == name and d is not None:
+            return d
+    return None
+
+
+def _resolve_axis_literals(ctx: ModuleContext, node: ast.AST,
+                           use_site: ast.AST,
+                           depth: int = 0) -> Optional[List[str]]:
+    """Literal axis names an axis argument denotes, or None (dynamic)."""
+    if depth > 4:
+        return None
+    got = _literal_str_list(node)
+    if got is not None:
+        return got
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("tuple", "list") and len(node.args) == 1:
+        return _resolve_axis_literals(ctx, node.args[0], use_site, depth + 1)
+    if isinstance(node, ast.Name):
+        for scope in _enclosing_scopes(ctx, use_site):
+            if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                dflt = _param_default(scope, node.id)
+                if dflt is not None:
+                    return _resolve_axis_literals(ctx, dflt, use_site,
+                                                  depth + 1)
+            for n in _scope_nodes(scope):
+                if isinstance(n, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == node.id
+                        for t in n.targets):
+                    return _resolve_axis_literals(ctx, n.value, use_site,
+                                                  depth + 1)
+    return None
+
+
+def _find_local_assign(ctx: ModuleContext, use_site: ast.AST,
+                       name: str) -> Optional[ast.AST]:
+    """RHS of a ``name = ...`` assignment visible at ``use_site``."""
+    for scope in _enclosing_scopes(ctx, use_site):
+        for n in _scope_nodes(scope):
+            if isinstance(n, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == name
+                    for t in n.targets):
+                return n.value
+    return None
+
+
+# -- R006: collective contracts --------------------------------------------
+
+
+def _axis_arg(call: ast.Call, op: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis_names"):
+            return kw.value
+    pos = _COLLECTIVE_AXIS_ARG[op]
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def _split_extent(ctx: ModuleContext, call: ast.Call) -> Optional[int]:
+    """Static extent of the all_to_all operand's split dimension."""
+    if not call.args:
+        return None
+    split_axis = 0
+    for kw in call.keywords:
+        if kw.arg == "split_axis" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, int):
+            split_axis = kw.value.value
+    if len(call.args) > 2 and isinstance(call.args[2], ast.Constant) \
+            and isinstance(call.args[2].value, int):
+        split_axis = call.args[2].value
+    x = call.args[0]
+    if isinstance(x, ast.Name):
+        x = _find_local_assign(ctx, call, x.id) or x
+    if isinstance(x, ast.Call) and isinstance(x.func, ast.Attribute) \
+            and x.func.attr == "reshape" and len(x.args) > split_axis:
+        dim = x.args[split_axis]
+        if isinstance(dim, ast.Constant) and isinstance(dim.value, int):
+            return dim.value
+    return None
+
+
+@register(
+    "R006",
+    "collective-contract",
+    "mesh-axis names used by lax collectives (psum/all_to_all/axis_index/"
+    "mesh.shape[...]) must exist in a mesh declaration, and static "
+    "all_to_all split extents must divide the shard count",
+)
+def check_collective_contract(ctx: ModuleContext) -> List[Finding]:
+    project = ctx.project
+    if project is None or not project.declared_axes:
+        return []  # no mesh declaration in scope: no universe to check
+    findings: List[Finding] = []
+    declared = project.declared_axes
+    for node in ast.walk(ctx.tree):
+        # mesh.shape["axis"] subscripts
+        if isinstance(node, ast.Subscript):
+            d = dotted_name(node.value)
+            sl = node.slice
+            if d and d.endswith(".shape") and isinstance(sl, ast.Constant) \
+                    and isinstance(sl.value, str) and sl.value not in declared:
+                findings.append(ctx.finding(
+                    "R006", node,
+                    f"mesh axis `{sl.value}` in `{d}[...]` is not declared "
+                    f"by any mesh in the project (known: "
+                    f"{sorted(declared)})"))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        op = _lax_op(ctx, node.func)
+        if op not in _COLLECTIVE_AXIS_ARG:
+            continue
+        axis_expr = _axis_arg(node, op)
+        if axis_expr is None:
+            continue
+        axes = _resolve_axis_literals(ctx, axis_expr, node)
+        if axes is None:
+            continue  # dynamic axis argument: out of static reach
+        unknown = [a for a in axes if a not in declared]
+        for a in unknown:
+            findings.append(ctx.finding(
+                "R006", node,
+                f"`lax.{op}` over axis `{a}` which no mesh declares "
+                f"(known axes: {sorted(declared)}) — an unbound axis "
+                "name fails at trace time inside shard_map"))
+        if op == "all_to_all" and not unknown:
+            sizes = [project.axis_sizes.get(a) for a in axes]
+            if sizes and all(isinstance(s, int) for s in sizes):
+                n_shards = 1
+                for s in sizes:
+                    n_shards *= s
+                extent = _split_extent(ctx, node)
+                if extent is not None and n_shards and extent % n_shards:
+                    findings.append(ctx.finding(
+                        "R006", node,
+                        f"`all_to_all` split extent {extent} is not "
+                        f"divisible by the {n_shards}-shard axis "
+                        f"{tuple(axes)} — the exchange needs equal "
+                        "per-shard tiles"))
+    return findings
+
+
+# -- R007: padding / sentinel contracts ------------------------------------
+
+
+def _is_pad_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    tail = None
+    if isinstance(node.func, ast.Name):
+        tail = node.func.id
+    elif isinstance(node.func, ast.Attribute):
+        tail = node.func.attr
+    return bool(tail) and "pad" in tail.lower()
+
+
+def _is_sentinel_const(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value in _SENTINEL_INTS
+    if isinstance(node, ast.Name) and "sent" in node.id.lower():
+        return True
+    if isinstance(node, ast.Attribute) and "sent" in node.attr.lower():
+        return True
+    if isinstance(node, ast.Call) and node.args:
+        # np.uint32(0xFFFFFFFF)-style wrappers
+        return _is_sentinel_const(node.args[0])
+    return False
+
+
+def _is_sentinel_fill(node: ast.AST) -> bool:
+    """np.full(shape, SENT) / jnp.pad(x, ..., constant_values=SENT)."""
+    if not isinstance(node, ast.Call):
+        return False
+    tail = node.func.attr if isinstance(node.func, ast.Attribute) else (
+        node.func.id if isinstance(node.func, ast.Name) else None)
+    if tail == "full" and len(node.args) >= 2:
+        return _is_sentinel_const(node.args[1])
+    if tail == "pad":
+        for kw in node.keywords:
+            if kw.arg == "constant_values":
+                return _is_sentinel_const(kw.value)
+    return False
+
+
+def _has_guard(node: ast.AST) -> bool:
+    """Mask/slice/where evidence inside an expression: the dead lanes
+    are being filtered, so the padded/sentinel value is used safely."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript):
+            return True
+        if isinstance(n, ast.Call):
+            tail = n.func.attr if isinstance(n.func, ast.Attribute) else (
+                n.func.id if isinstance(n.func, ast.Name) else None)
+            if tail in ("where", "compress", "is_sentinel", "take"):
+                return True
+        if isinstance(n, ast.Name) and any(m in n.id.lower()
+                                           for m in _MASKISH):
+            return True
+        if isinstance(n, ast.Attribute) and any(m in n.attr.lower()
+                                                for m in _MASKISH):
+            return True
+        if isinstance(n, ast.Compare):
+            return True
+    return False
+
+
+_PRESERVING_METHODS = {
+    "reshape", "astype", "ravel", "flatten", "copy", "view", "squeeze",
+    "transpose",
+}
+
+
+def _taint_flows(node: ast.AST, names: Set[str]) -> bool:
+    """Does taint in ``names`` flow through this value expression?
+
+    Deliberately narrow: taint crosses arithmetic, tuples, subscripts,
+    pad calls, and shape-preserving methods (``x.reshape(...)``), but
+    NOT arbitrary function calls — a callee may consume the padding
+    internally (e.g. a kernel launch whose outputs are per-lane ranks),
+    and propagating through it drowns the rule in false positives.
+    """
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Name):
+            if n.id in names:
+                return True
+            continue
+        if isinstance(n, ast.Call):
+            if _is_pad_call(n):
+                stack.extend(n.args)
+            elif isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in _PRESERVING_METHODS:
+                stack.append(n.func.value)
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+    return False
+
+
+class _TaintScope:
+    """Local-dataflow tracking of padded / sentinel-filled names."""
+
+    def __init__(self, ctx: ModuleContext, scope: ast.AST):
+        self.ctx = ctx
+        self.padded: Set[str] = set()
+        self.sentinel: Set[str] = set()
+        assigns = [
+            n for n in _scope_nodes(scope, keep_lambdas=True)
+            if isinstance(n, (ast.Assign, ast.AnnAssign, ast.AugAssign))
+        ]
+        for _ in range(2):  # fixpoint on straight-line chains
+            for a in assigns:
+                value = a.value
+                if value is None:
+                    continue
+                targets = a.targets if isinstance(a, ast.Assign) else [a.target]
+                names = [el.id for t in targets
+                         for el in (t.elts if isinstance(t, ast.Tuple) else [t])
+                         if isinstance(el, ast.Name)]
+                if not names:
+                    continue
+                guarded = _has_guard(value)
+                pad_src = (_is_pad_call(value)
+                           or _taint_flows(value, self.padded))
+                sent_src = (_is_sentinel_fill(value)
+                            or _taint_flows(value, self.sentinel))
+                for name in names:
+                    if pad_src and not guarded:
+                        self.padded.add(name)
+                    else:
+                        self.padded.discard(name)
+                    if sent_src and not guarded:
+                        self.sentinel.add(name)
+                    else:
+                        self.sentinel.discard(name)
+
+
+@register(
+    "R007",
+    "padding-sentinel-contract",
+    "padded arrays (np.pad/jnp.pad/pad_* helpers, the n_real batching "
+    "contract) must be masked/sliced before reductions or compactions, "
+    "and sentinel-filled word buffers must be filtered before unpack_*",
+)
+def check_padding_sentinel(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    scopes: List[ast.AST] = [ctx.tree] + list(ctx.functions.values())
+    for scope in scopes:
+        taint = _TaintScope(ctx, scope)
+        if not taint.padded and not taint.sentinel:
+            continue
+        for node in _scope_nodes(scope, keep_lambdas=True):
+            if not isinstance(node, ast.Call):
+                continue
+            # (a) reduction over a padded value with no mask/slice/where
+            data = None
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _REDUCERS:
+                mod = node.func.value
+                root = dotted_name(mod)
+                if root in ctx.numpy_aliases or root in ctx.jnp_aliases:
+                    data = node.args[0] if node.args else None
+                else:
+                    data = mod  # x.sum() method form
+            if data is not None and _taint_flows(data, taint.padded) \
+                    and not _has_guard(data):
+                findings.append(ctx.finding(
+                    "R007", node,
+                    f"reduction `{node.func.attr}` over a padded array — "
+                    "dead pad lanes count into the result; slice by the "
+                    "real-row count (x[:n_real]) or mask first"))
+                continue
+            # (b) unpack of sentinel-filled words with no filter
+            tail = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else (node.func.id if isinstance(node.func, ast.Name) else None)
+            if tail and tail.startswith("unpack"):
+                for arg in node.args:
+                    if _taint_flows(arg, taint.sentinel) \
+                            and not _has_guard(arg):
+                        findings.append(ctx.finding(
+                            "R007", node,
+                            f"`{tail}` on a sentinel-filled word buffer — "
+                            "all-ones sentinel lanes decode as garbage "
+                            "pairs; filter (words != SENTINEL / winner "
+                            "mask) before unpacking"))
+                        break
+    return findings
+
+
+# -- R008: serving concurrency ---------------------------------------------
+
+
+def _lock_item_name(item: ast.withitem) -> Optional[str]:
+    d = dotted_name(item.context_expr)
+    if d and "lock" in d.rpartition(".")[2].lower():
+        return d
+    return None
+
+
+def _with_lock_names(node: ast.With) -> List[str]:
+    return [n for n in (_lock_item_name(i) for i in node.items) if n]
+
+
+def _is_blocking_call(node: ast.Call) -> bool:
+    if isinstance(node.func, ast.Name):
+        return node.func.id == "sleep"
+    if not isinstance(node.func, ast.Attribute):
+        return False
+    attr = node.func.attr
+    if attr in _BLOCKING_ATTRS:
+        return True
+    if attr in ("get", "put"):
+        recv = dotted_name(node.func.value)
+        tail = (recv or "").rpartition(".")[2].lower()
+        return any(tail == q or tail.endswith("_" + q) or tail.endswith(q)
+                   for q in _QUEUEISH)
+    return False
+
+
+def _under_lock(ctx: ModuleContext, node: ast.AST,
+                stop_at: Optional[ast.AST] = None) -> bool:
+    cur = ctx.parents.get(node)
+    while cur is not None and cur is not stop_at:
+        if isinstance(cur, ast.With) and _with_lock_names(cur):
+            return True
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        cur = ctx.parents.get(cur)
+    return False
+
+
+def _self_attr_writes(ctx: ModuleContext, fn) -> List[Tuple[str, ast.AST]]:
+    """(attr, node) per mutation of ``self.<attr>`` in the method."""
+    out: List[Tuple[str, ast.AST]] = []
+
+    def self_attr(node: ast.AST) -> Optional[str]:
+        # self.X, self.X[i], self.X.anything -> "X"
+        while isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        return None
+
+    for node in _scope_nodes(fn, keep_lambdas=True):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for el in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                    attr = self_attr(el)
+                    if attr is not None:
+                        out.append((attr, node))
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _MUTATORS:
+            attr = self_attr(node.func.value)
+            if attr is not None:
+                out.append((attr, node))
+    return out
+
+
+@register(
+    "R008",
+    "serving-concurrency",
+    "blocking calls (sleep/join/wait/acquire/queue get-put/"
+    "block_until_ready) while holding a lock, and attributes mutated "
+    "both under a lock and bare outside __init__ in the same class",
+)
+def check_serving_concurrency(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    # (a) blocking call while a lock is held
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.With) and _with_lock_names(node)):
+            continue
+        locks = ", ".join(_with_lock_names(node))
+        for inner in _scope_nodes(node, keep_lambdas=True):
+            if isinstance(inner, ast.Call) and _is_blocking_call(inner):
+                findings.append(ctx.finding(
+                    "R008", inner,
+                    f"blocking call while holding `{locks}` — every other "
+                    "lane stalls behind this request; move the wait "
+                    "outside the critical section"))
+    # (b) inconsistently-guarded attribute mutations per class
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        locked: Dict[str, List[ast.AST]] = {}
+        bare: Dict[str, List[Tuple[str, ast.AST]]] = {}
+        for fn in node.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for attr, site in _self_attr_writes(ctx, fn):
+                if _under_lock(ctx, site, stop_at=fn):
+                    locked.setdefault(attr, []).append(site)
+                elif fn.name != "__init__":
+                    bare.setdefault(attr, []).append((fn.name, site))
+        for attr, sites in sorted(bare.items()):
+            if attr not in locked:
+                continue
+            for fn_name, site in sites:
+                findings.append(ctx.finding(
+                    "R008", site,
+                    f"`self.{attr}` is mutated under a lock elsewhere in "
+                    f"`{node.name}` but bare in `{fn_name}` — a concurrent "
+                    "lane can observe torn state; hold the same lock (or "
+                    "confine the attribute to one lane)"))
+    return findings
+
+
+# -- R009: pallas kernel shapes --------------------------------------------
+
+
+def _is_pallas_call_expr(ctx: ModuleContext, node: ast.AST) -> bool:
+    if isinstance(node, ast.Name) and node.id in ctx.pallas_call_names:
+        return True
+    d = dotted_name(node)
+    return bool(d) and any(d == f"{a}.pallas_call"
+                           for a in ctx.pallas_aliases)
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _blockspec_dims(ctx: ModuleContext, spec: ast.AST,
+                    use_site: ast.AST) -> Optional[List[Optional[int]]]:
+    """Literal dims of a BlockSpec expression (None per unknown dim)."""
+    if isinstance(spec, ast.Name):
+        spec = _find_local_assign(ctx, use_site, spec.id) or spec
+    if not (isinstance(spec, ast.Call)
+            and (dotted_name(spec.func) or "").rpartition(".")[2]
+            == "BlockSpec"):
+        return None
+    shape = spec.args[0] if spec.args else _kw(spec, "block_shape")
+    if not isinstance(shape, ast.Tuple):
+        return None
+    dims: List[Optional[int]] = []
+    for el in shape.elts:
+        dims.append(el.value if isinstance(el, ast.Constant)
+                    and isinstance(el.value, int) else None)
+    return dims
+
+
+def _spec_list(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    if node is None:
+        return None
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+def _kernel_fn_name(ctx: ModuleContext, call: ast.Call) -> Optional[str]:
+    if not call.args:
+        return None
+    k = call.args[0]
+    if isinstance(k, ast.Call) and ctx.is_partial_expr(k.func) and k.args:
+        if len(k.args) > 1:
+            return None  # positional partial binding shifts params: skip
+        k = k.args[0]
+    if isinstance(k, ast.Name):
+        return k.id
+    d = dotted_name(k)
+    return d.rpartition(".")[2] if d else None
+
+
+def _grid_has_unguarded_floordiv(ctx: ModuleContext,
+                                 call: ast.Call) -> bool:
+    grid = _kw(call, "grid")
+    if grid is None:
+        return False
+    if isinstance(grid, ast.Name):
+        grid = _find_local_assign(ctx, call, grid.id) or grid
+    has_div = any(isinstance(n, ast.BinOp) and isinstance(n.op, ast.FloorDiv)
+                  for n in ast.walk(grid))
+    if not has_div:
+        return False
+    encl = ctx.enclosing_function(call)
+    scope = encl if encl is not None else ctx.tree
+    for n in _scope_nodes(scope):
+        if isinstance(n, (ast.Assert, ast.If)):
+            test = n.test
+            if any(isinstance(m, ast.BinOp) and isinstance(m.op, ast.Mod)
+                   for m in ast.walk(test)):
+                return False  # a remainder guard exists in this scope
+        if _is_pad_call(n):
+            return False  # operands are padded up before the launch
+    return True
+
+
+@register(
+    "R009",
+    "pallas-kernel-shape",
+    "pallas_call grids computed with floor division need a divisibility "
+    "guard, and constant ref indices inside the kernel must stay inside "
+    "the ref's BlockSpec block shape",
+)
+def check_pallas_kernel_shape(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and _is_pallas_call_expr(ctx, node.func)):
+            continue
+        if _grid_has_unguarded_floordiv(ctx, node):
+            findings.append(ctx.finding(
+                "R009", node,
+                "pallas_call grid uses floor division with no "
+                "divisibility guard in scope — a non-dividing shape "
+                "silently drops the remainder tile; assert "
+                "`dim % block == 0` or pad first"))
+        # map kernel params to BlockSpec dims: in_specs then out_specs
+        name = _kernel_fn_name(ctx, node)
+        kernel = ctx.functions.get(name) if name else None
+        if kernel is None:
+            continue
+        specs = (_spec_list(_kw(node, "in_specs")) or []) + \
+                (_spec_list(_kw(node, "out_specs")) or [])
+        params = [a.arg for a in list(kernel.args.posonlyargs)
+                  + list(kernel.args.args)]
+        if len(params) < len(specs):
+            continue  # *args or mismatched launch: skip
+        dims_of: Dict[str, List[Optional[int]]] = {}
+        for param, spec in zip(params, specs):
+            dims = _blockspec_dims(ctx, spec, node)
+            if dims is not None:
+                dims_of[param] = dims
+        if not dims_of:
+            continue
+        for sub in ast.walk(kernel):
+            if not (isinstance(sub, ast.Subscript)
+                    and isinstance(sub.value, ast.Name)
+                    and sub.value.id in dims_of):
+                continue
+            dims = dims_of[sub.value.id]
+            idx = sub.slice
+            elts = list(idx.elts) if isinstance(idx, ast.Tuple) else [idx]
+            for i, el in enumerate(elts):
+                if i >= len(dims) or dims[i] is None:
+                    continue
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    if el.value >= dims[i] or el.value < -dims[i]:
+                        findings.append(ctx.finding(
+                            "R009", sub,
+                            f"static index {el.value} on ref "
+                            f"`{sub.value.id}` exceeds its BlockSpec "
+                            f"block extent {dims[i]} along dim {i} — "
+                            "out-of-bounds ref access inside the kernel"))
+    return findings

@@ -595,7 +595,9 @@ class DeltaBlocker:
         smat = np.zeros((len(recs), kmax), np.int32)
         kmat[u_s, col] = k_s
         smat[u_s, col] = s_s
-        khi, klo = unpack_key64(kmat)
+        # sentinel lanes decode on purpose: they carry smat == 0, so
+        # they can never win the shared-max below
+        khi, klo = unpack_key64(kmat)  # repro: noqa[R007]
         ra = np.searchsorted(recs, a)
         rb = np.searchsorted(recs, b)
         n_p = len(pair_pack)
