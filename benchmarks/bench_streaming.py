@@ -125,8 +125,55 @@ def bench_ingest_throughput(n_records: int = 20_000, seed: int = 1):
         print(f"streaming,ingest,mb={mb},{rate:.3g} records/s")
 
 
-def run(check_speedup: bool = False, n_records: int = 100_000):
+def bench_sharded_ingest(n_shards: int, n_records: int = 20_000,
+                         mb: int = 1024, seed: int = 2):
+    """Sharded-store ingest (host-routing mirror) vs single-host, with
+    ledger parity asserted and the per-shard occupancy/skew gauges from
+    ``memory_stats`` emitted into the JSON record."""
+    from repro.streaming import ShardedBlockStore
+
+    cfg = hdb.HDBConfig(max_block_size=64, max_iterations=6,
+                        cms_width=1 << 16)
+    rng = np.random.default_rng(seed)
+    keys, valid = _make_stream_keys(rng, n_records)
+    flat = BlockStore(cfg)
+    fb = DeltaBlocker(flat)
+    st = ShardedBlockStore(cfg, n_shards=n_shards)
+    sb = DeltaBlocker(st)
+    fb.ingest_keys(keys[:mb], valid[:mb])   # warm
+    sb.ingest_keys(keys[:mb], valid[:mb])
+    times = {}
+    for name, blocker in (("flat", fb), (f"shards{n_shards}", sb)):
+        t0 = time.perf_counter()
+        for off in range(mb, n_records, mb):
+            sync(blocker.ingest_keys(keys[off:off + mb],
+                                     valid[off:off + mb]))
+        times[name] = time.perf_counter() - t0
+    assert np.array_equal(flat.led_pack, st.led_pack), (
+        f"sharded (n={n_shards}) ledger diverged from single-host")
+    ms = st.memory_stats()
+    n_done = n_records - mb
+    emit(f"streaming/sharded_ingest_n{n_shards}",
+         times[f"shards{n_shards}"] * 1e6 / max(n_done, 1),
+         f"records_per_s={n_done / times[f'shards{n_shards}']:.3g};"
+         f"shard_skew={ms['shard_skew']:.3f};"
+         f"keytab_bytes={ms['keytab_bytes']};"
+         f"csr_bytes={ms['csr_bytes']};ledger_bytes={ms['ledger_bytes']}")
+    print(f"streaming,sharded_ingest,n_shards={n_shards},"
+          f"{n_done / times[f'shards{n_shards}']:.3g} records/s,"
+          f"skew={ms['shard_skew']:.3f} "
+          f"(single-host {n_done / times['flat']:.3g} records/s)")
+    for s in range(n_shards):
+        print(f"streaming,shard{s},keytab={ms[f'shard{s}_keytab_bytes']},"
+              f"csr={ms[f'shard{s}_csr_bytes']},"
+              f"ledger={ms[f'shard{s}_ledger_bytes']}")
+
+
+def run(check_speedup: bool = False, n_records: int = 100_000,
+        n_shards: int = 0):
     bench_ingest_throughput()
+    if n_shards > 0:
+        bench_sharded_ingest(n_shards)
     bench_delta_vs_full(n_records=n_records, check_speedup=check_speedup)
 
 
@@ -140,8 +187,13 @@ if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.bench_streamin
     ap.add_argument("--json", nargs="?", const="BENCH_streaming.json",
                     default=None, metavar="PATH",
                     help="write the BENCH_streaming.json perf record")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="also bench an N-shard ShardedBlockStore ingest "
+                    "(parity-checked; per-shard bytes + skew in the JSON)")
     args = ap.parse_args()
-    run(check_speedup=args.check, n_records=args.records)
+    run(check_speedup=args.check, n_records=args.records,
+        n_shards=args.shards)
     if args.json:
         from .common import write_json
-        write_json(args.json, "streaming", records=args.records)
+        write_json(args.json, "streaming", records=args.records,
+                   shards=args.shards)

@@ -20,6 +20,7 @@ TRANSFER_GUARDED_MODULES = {
     "test_serving",
     "test_sort_radix",
     "test_streaming",
+    "test_streaming_sharded",
 }
 
 

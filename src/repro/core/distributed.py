@@ -128,7 +128,7 @@ def _make_hdb_step_cached(cfg: HDBConfig, mesh: Mesh,
         klo = jnp.where(flat_keep, flat_key[1], jnp.uint32(0xFFFFFFFF))
         rid = rid0 + jnp.broadcast_to(
             jnp.arange(n_loc, dtype=jnp.int32)[:, None], (n_loc, k)).reshape(-1)
-        _, owner_h = hashing.hash_u64((khi, klo), seed=0xA110)
+        _, owner_h = hashing.hash_u64((khi, klo), seed=routing.KEY_OWNER_SEED)
         owner = jnp.where(flat_keep,
                           (owner_h % jnp.uint32(n_shards)).astype(jnp.int32),
                           jnp.int32(n_shards))
@@ -163,7 +163,7 @@ def _make_hdb_step_cached(cfg: HDBConfig, mesh: Mesh,
         r_xhi = jnp.where(rep_ok, xors[0][rep_idx], jnp.uint32(0xFFFFFFFF))
         r_xlo = jnp.where(rep_ok, xors[1][rep_idx], jnp.uint32(0xFFFFFFFF))
         r_sz = jnp.where(rep_ok, sizes[rep_idx], INT32_MAX)
-        _, xo = hashing.hash_u64((r_xhi, r_xlo), seed=0xDED0)
+        _, xo = hashing.hash_u64((r_xhi, r_xlo), seed=routing.REP_OWNER_SEED)
         xowner = jnp.where(rep_ok, (xo % jnp.uint32(n_shards)).astype(jnp.int32),
                            jnp.int32(n_shards))
         xcap = int(np.ceil(rcap / n_shards * dist.route_slack)) + 8

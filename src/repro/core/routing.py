@@ -13,6 +13,15 @@ shrinking survivor set) or fall back (pair dedupe must stay exact).
 flat shard id used by ``owner % n_shards`` routing. Axis sizes are taken
 from the mesh *statically* (``jax.lax.axis_size`` does not exist on the
 pinned JAX version, and sizes are compile-time constants anyway).
+
+Ownership seeds are shared constants: ``KEY_OWNER_SEED`` partitions
+64-bit block keys (the HDB exact-count exchange AND the sharded
+streaming ``BlockStore``'s key-table/CMS/CSR slices — same partition, so
+a batch shard and a streaming shard agree on who owns a key) and
+``REP_OWNER_SEED`` partitions membership fingerprints / pair packs.
+``np_owner_u64`` is the bit-exact host mirror of the device rule
+(low 32 hash bits mod n_shards), letting host-resident streaming state
+route without staging keys through the device.
 """
 from __future__ import annotations
 
@@ -20,14 +29,37 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
+
+from . import hashing
+
+# Shared fingerprint-routing seeds (see module doc).
+KEY_OWNER_SEED = 0xA110
+REP_OWNER_SEED = 0xDED0
 
 # Group ranks come from a one-hot running count (O(n * n_shards)
 # vectorized adds; beats XLA's comparator argsort by a wide margin on CPU)
 # only while the (n, n_shards+1) transient stays small; big routes (the
-# HDB key exchange at production L) keep the O(n log n) argsort path.
+# HDB key exchange at production L) and wide meshes (> 64 shards) keep
+# the O(n log n) argsort path — ``route_buckets`` is valid for ANY
+# n_shards, the constants below only pick the rank strategy.
 _ONEHOT_RANK_MAX_SHARDS = 64
 _ONEHOT_RANK_MAX_ELEMS = 1 << 23  # int32 transient cap: 32 MiB
+
+
+def np_owner_u64(x: np.ndarray, n_shards: int,
+                 seed: int = KEY_OWNER_SEED) -> np.ndarray:
+    """int32 owner shard per packed u64 value (host mirror).
+
+    Bit-exact with the device rule used by ``core.distributed``:
+    ``(low 32 bits of hash_u64(x, seed)) % n_shards``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    h = hashing.np_hash_u64_vec(np.asarray(x, np.uint64), seed=seed)
+    return ((h & np.uint64(0xFFFFFFFF))
+            % np.uint64(n_shards)).astype(np.int32)
 
 
 def linear_shard_index(mesh: Mesh, axis_names: Sequence[str]) -> jnp.ndarray:

@@ -64,6 +64,11 @@ class ServiceConfig:
     min_bucket: int = 8            # smallest bucket-ladder rung
     default_deadline_s: Optional[float] = None   # probe deadline if unset
     sort_backend: str = "auto"     # pair-ledger dedupe-sort knob
+    # > 1: tenants created by the service get a fingerprint-sharded
+    # ShardedBlockStore (streaming/shard.py) instead of a single-host
+    # BlockStore; results are bit-identical, the snapshot gains per-shard
+    # occupancy/skew gauges
+    n_shards: int = 1
 
 
 @dataclasses.dataclass
@@ -155,7 +160,13 @@ class DedupeService:
                    store: Optional[BlockStore] = None) -> Tenant:
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already exists")
-        store = BlockStore(self.hdb_cfg) if store is None else store
+        if store is None:
+            if self.cfg.n_shards > 1:
+                from ..streaming.shard import ShardedBlockStore
+                store = ShardedBlockStore(self.hdb_cfg,
+                                          n_shards=self.cfg.n_shards)
+            else:
+                store = BlockStore(self.hdb_cfg)
         tenant = Tenant(name, store,
                         DeltaBlocker(store, sort_backend=self.cfg.sort_backend))
         self._tenants[name] = tenant
@@ -250,12 +261,33 @@ class DedupeService:
         return self.probe_responses, self.ingest_responses
 
     def snapshot(self) -> dict:
-        """Metrics snapshot (plain dict) with live queue-depth gauges."""
+        """Metrics snapshot (plain dict) with live queue-depth gauges.
+
+        Tenants on sharded stores add occupancy gauges: ``store_shards``
+        (max shard count), ``store_shard_skew_max`` (worst max/mean
+        per-shard byte skew; 1.0 == balanced), and the two never-silent
+        fallback counters (routed ledger syncs and routed key-table
+        exchanges that dropped to the lossless host path).
+        """
         depths = self.queue_depths()
+        shards = 1
+        skew = 1.0
+        ledger_fb = exchange_fb = 0
+        for t in self._tenants.values():
+            ledger_fb += getattr(t.blocker, "routed_fallback_total", 0)
+            router = getattr(t.store, "router", None)
+            if router is not None:
+                shards = max(shards, t.store.n_shards)
+                skew = max(skew, t.store.shard_skew())
+                exchange_fb += router.exchange_fallback_total
         return self.metrics.snapshot(
             read_queue_depth=depths["read"],
             write_queue_depth=depths["write"],
-            tenants=len(self._tenants))
+            tenants=len(self._tenants),
+            store_shards=shards,
+            store_shard_skew_max=skew,
+            ledger_routed_fallback_total=ledger_fb,
+            store_exchange_fallback_total=exchange_fb)
 
     # ------------------------------------------------------------------
 

@@ -29,6 +29,11 @@ fixed-shape jitted functions the batch path uses:
   block size — the live equivalent of ``pairs.dedupe_pairs``; each ingest
   returns exactly the pairs added/retracted.
 
+All three state families are partitionable by key fingerprint:
+``shard.ShardedBlockStore`` routes them over N shards with the batch
+layer's ``core.routing`` owner rule and stays bit-identical to the
+single-host store (docs/STREAMING.md covers the shard contract).
+
 Why the CMS makes this work (the fold-in argument)
 --------------------------------------------------
 
@@ -62,3 +67,4 @@ metrics — is ``repro.serving.DedupeService`` (docs/SERVING.md).
 from .store import BlockStore, LevelState  # noqa: F401
 from .delta import DeltaBlocker, IngestReport, QueryResult  # noqa: F401
 from .engine import StreamingEngine, RecordBatch  # noqa: F401
+from .shard import ShardedBlockStore, StoreShard, ShardRouter  # noqa: F401

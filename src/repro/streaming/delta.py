@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -46,6 +47,7 @@ from ..core import hashing
 from ..core import hdb as hdb_mod
 from ..core import pairs as pairs_mod
 from ..core import sketches
+from ..core.hdb import RepCapacityWarning
 from .store import (INT32_MAX, BlockStore, LevelState, gather_segments,
                     pack_key64, pack_pair, reduce_by_key, searchsorted_mask,
                     unpack_key64, unpack_pair)
@@ -136,12 +138,23 @@ class DeltaBlocker:
     ``pairs.dedupe_pairs`` call (the "auto"/"comparator"/"radix" dedupe-
     sort knob of the pair engine); results are bit-identical across
     choices, only the sync's sort speed differs.
+
+    ``store`` is duck-typed: a single-host ``BlockStore`` or a
+    ``streaming.shard.ShardedBlockStore``. When the store carries a mesh
+    (``store.mesh``/``store.axis_names``), every ledger sync's exact pair
+    dedupe runs through ``core.distributed.dedupe_pairs_distributed`` —
+    same fingerprint-routed shards as the store's ledger partition — and
+    any lossless fallback to the single-device engine is re-warned (never
+    silent) and counted in ``routed_fallback_total``.
     """
 
     def __init__(self, store: BlockStore, sort_backend: str = "auto"):
         self.store = store
         self.cfg = store.cfg
         self.sort_backend = sort_backend
+        self.mesh = getattr(store, "mesh", None)
+        self.mesh_axis_names = tuple(getattr(store, "axis_names", ("data",)))
+        self.routed_fallback_total = 0
 
     # ------------------------------------------------------------------
     # ingest
@@ -258,10 +271,12 @@ class DeltaBlocker:
         if len(rm_rows):
             old_idx = state.idx[:, rm_rows]
             old_valid = state.valid[rm_rows]
+            rm_e_idx = old_idx[:, old_valid]
             for j in range(depth):
-                ij = old_idx[j][old_valid]
-                np.subtract.at(state.cms[j], ij, 1)
-                changed_b[j][ij] = True
+                changed_b[j][rm_e_idx[j]] = True
+            if rm_e_idx.shape[1]:
+                state.cms_apply(state.key64[rm_rows][old_valid],
+                                rm_e_idx, -1)
             old_keep = state.keep[rm_rows]
             if old_keep.any():
                 orid = np.broadcast_to(state.rids[rm_rows][:, None],
@@ -282,9 +297,10 @@ class DeltaBlocker:
             idx = sketches.np_cms_indices(cfg.cms, k64_new[nv])
             v = r_valid[nv]
             for j in range(depth):
-                ij = idx[j][v]
-                np.add.at(state.cms[j], ij, 1)
-                changed_b[j][ij] = True
+                changed_b[j][idx[j][v]] = True
+            add_e_idx = idx[:, v]
+            if add_e_idx.shape[1]:
+                state.cms_apply(k64_new[nv][v], add_e_idx, 1)
             state.append_rows(r_rids[nv], r_keys[nv], k64_new[nv], v,
                               r_psize[nv], idx)
 
@@ -299,10 +315,10 @@ class DeltaBlocker:
             aff[live_repl_rows] |= state.valid[live_repl_rows]
         n_aff = int(aff.sum())
         if n_aff:
-            a_idx = state.idx[:, aff]
-            est = state.cms[0][a_idx[0]]
+            cg = state.cms_lookup(state.idx[:, aff])
+            est = cg[0]
             for j in range(1, depth):
-                np.minimum(est, state.cms[j][a_idx[j]], out=est)
+                np.minimum(est, cg[j], out=est)
             p = _pow2(n_aff)
             est_p = np.zeros(p, np.int32)
             est_p[:n_aff] = est
@@ -338,9 +354,9 @@ class DeltaBlocker:
             state.update_keytab(dk[nz], dc[nz], df[nz])
 
         # ---- duplicate-block dedupe over the over-sized table slice ----
-        over = state.tab_cnt > cfg.max_block_size
-        n_over = int(over.sum())
-        new_surv = np.zeros(len(state.tab_key), bool)
+        o_key, o_cnt, o_fp = state.oversized(cfg.max_block_size)
+        n_over = len(o_key)
+        surv_flags = np.zeros(n_over, bool)
         if n_over:
             p = _pow2(n_over, floor=64)
             xhi = np.full(p, _SENT32, np.uint32)
@@ -348,19 +364,19 @@ class DeltaBlocker:
             sz = np.full(p, INT32_MAX, np.int32)
             khi = np.full(p, _SENT32, np.uint32)
             klo = np.full(p, _SENT32, np.uint32)
-            fhi, flo = unpack_key64(state.tab_fp[over])
+            fhi, flo = unpack_key64(o_fp)
             xhi[:n_over], xlo[:n_over] = fhi, flo
-            sz[:n_over] = state.tab_cnt[over].astype(np.int32)
-            khi[:n_over], klo[:n_over] = unpack_key64(state.tab_key[over])
+            sz[:n_over] = o_cnt.astype(np.int32)
+            khi[:n_over], klo[:n_over] = unpack_key64(o_key)
             _, _, surv = hdb_mod.survivor_reps(
                 jnp.asarray(xhi), jnp.asarray(xlo), jnp.asarray(sz),
                 jnp.asarray(khi), jnp.asarray(klo))
-            new_surv[over] = np.asarray(surv)[:n_over]
-        surv_changed = new_surv != state.tab_surv
-        state.tab_surv = new_surv
-        if surv_changed.any():
-            changed_keys = np.union1d(changed_keys,
-                                      state.tab_key[surv_changed])
+            surv_flags = np.asarray(surv)[:n_over]
+        # set_survivors runs even with no over-keys: stale flags from the
+        # previous ingest must clear (on every shard of a sharded store)
+        sv_changed = state.set_survivors(o_key, surv_flags)
+        if len(sv_changed):
+            changed_keys = np.union1d(changed_keys, sv_changed)
 
         # ---- refresh accept/survive where a decision input changed ----
         refresh = aff
@@ -483,6 +499,38 @@ class DeltaBlocker:
             .astype(np.int64),
             blk.size[keep], members)
 
+    def _dedupe_blocks(self, blk: pairs_mod.Blocks,
+                       budget: int) -> pairs_mod.PairSet:
+        """One exact pair dedupe, routed over the store's mesh if any.
+
+        ``dedupe_pairs_distributed`` already guarantees lossless output
+        (it falls back to the single-device engine on capacity overflow
+        or when the routed contract is unavailable); this wrapper makes
+        every such fallback loud — re-warned with streaming context and
+        counted in ``routed_fallback_total`` for the metrics snapshot.
+        """
+        if self.mesh is not None:
+            from ..core import distributed as dist_mod
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                ps = dist_mod.dedupe_pairs_distributed(
+                    blk, self.mesh, self.mesh_axis_names, budget=budget,
+                    sort_backend=self.sort_backend)
+            for w in caught:
+                if issubclass(w.category, (RepCapacityWarning,
+                                           RuntimeWarning)):
+                    self.routed_fallback_total += 1
+                    warnings.warn(
+                        "[streaming] routed ledger sync fell back to the "
+                        f"single-device pair engine: {w.message}",
+                        w.category, stacklevel=3)
+                else:
+                    warnings.warn_explicit(w.message, w.category,
+                                           w.filename, w.lineno)
+            return ps
+        return pairs_mod.dedupe_pairs(blk, budget=budget, backend="auto",
+                                      sort_backend=self.sort_backend)
+
     def _sync_pairs(self, add_k, add_r, ret_k, ret_r):
         """Apply assignment deltas; return ((a, b, src) added, (a, b)
         retracted) ledger changes, keeping the ledger equal to an exact
@@ -510,9 +558,7 @@ class DeltaBlocker:
             blk = self._nontrivial(csr)
             if blk.num_blocks == 0:
                 return (np.zeros((0,), np.uint64), np.zeros((0,), np.int64))
-            total = blk.num_pair_slots
-            ps = pairs_mod.dedupe_pairs(blk, budget=total + 1, backend="auto",
-                                        sort_backend=self.sort_backend)
+            ps = self._dedupe_blocks(blk, blk.num_pair_slots + 1)
             return pack_pair(ps.a, ps.b), ps.src_size
 
         join_pack, _ = pair_set(shrink_old_csr)   # may have LOST a source
@@ -521,11 +567,7 @@ class DeltaBlocker:
         _, in_join = searchsorted_mask(join_pack, new_pack)
         grow_pack = new_pack[~in_join]
         grow_aff = new_src[~in_join]
-        lpos, lfound = searchsorted_mask(self.store.led_pack, grow_pack)
-        cur = np.zeros(len(grow_pack), np.int64)
-        if len(self.store.led_pack):
-            cur[lfound] = self.store.led_src[
-                np.minimum(lpos, len(self.store.led_pack) - 1)][lfound]
+        cur, lfound = self.store.ledger_src(grow_pack)
         grow_src = np.maximum(cur, grow_aff)
         touch = ~lfound | (grow_src != cur)       # skip no-op upserts
         # join branch: full recompute (affected part + unaffected coverage)
@@ -580,9 +622,7 @@ class DeltaBlocker:
         key, rid = key[~isaff], rid[~isaff]
         if len(key) == 0:
             return np.zeros(len(pair_pack), np.int64)
-        bpos, bfound = searchsorted_mask(store.bk_key, key)
-        size = np.where(bfound, store.bk_size[np.minimum(
-            bpos, len(store.bk_key) - 1)], 0)
+        size = store.block_size_of(key)
         # dense padded (record -> key list) matrix
         uidx = np.searchsorted(recs, rid)
         counts = np.bincount(uidx, minlength=len(recs))
@@ -706,9 +746,10 @@ class DeltaBlocker:
             levels_walked += valid.any(axis=1)
             k64 = pack_key64(keys)
             idx = sketches.np_cms_indices(cfg.cms, k64)
+            cnts = state.cms_lookup(idx)
             est = None
             for j in range(cfg.cms_depth):
-                e = state.cms[j][idx[j]].astype(np.int64)
+                e = cnts[j].astype(np.int64)
                 if include_probe:
                     # the probe's own fold-in: +1 per probe entry landing
                     # in the bucket (exact, incl. self-collisions)

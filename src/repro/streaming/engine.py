@@ -151,9 +151,14 @@ class StreamingEngine:
     def __init__(self, blocking: Dict[str, blocks_mod.ColumnBlocking],
                  cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(),
                  ingest_slots: int = 256, query_slots: int = 64,
-                 matcher_cfg=None, sort_backend: str = "auto"):
+                 matcher_cfg=None, sort_backend: str = "auto",
+                 n_shards: int = 1):
         self.blocking = blocking
-        self.store = BlockStore(cfg)
+        if n_shards > 1:
+            from .shard import ShardedBlockStore
+            self.store = ShardedBlockStore(cfg, n_shards=n_shards)
+        else:
+            self.store = BlockStore(cfg)
         # sort_backend: pair-engine dedupe-sort knob for ledger syncs
         self.blocker = DeltaBlocker(self.store, sort_backend=sort_backend)
         self.ingest_slots = ingest_slots

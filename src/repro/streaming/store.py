@@ -7,22 +7,30 @@ One store holds, for every HDB iteration level ``i``:
   ``(R_i, W_i)`` key/valid/psize arrays restricted to live rows, plus the
   cached decision bits (right/keep/accept/survive) and per-entry exact
   sizes from the last ingest,
-- the level's Count-Min Sketch over its live (record, key) entries, kept
-  current by *linear fold-in/fold-out* (``sketches.cms_fold`` /
-  ``cms_subtract``) — plus the cached bucket indices per entry so a delta
-  touches only the buckets it hashes to,
-- a key table (sorted u64 keys -> exact keep-entry count, XOR membership
-  fingerprint, survivor flag) — the incremental mirror of Algorithm 4's
-  sort-based exact counting,
+- the level's **key space** (``LevelKeys``): the Count-Min Sketch over
+  its live (record, key) entries, kept current by *linear fold-in/
+  fold-out* (``sketches.cms_fold`` / ``cms_subtract``), and the key table
+  (sorted u64 keys -> exact keep-entry count, XOR membership fingerprint,
+  survivor flag) — the incremental mirror of Algorithm 4's sort-based
+  exact counting,
 
 and globally:
 
-- the accepted-blocks CSR (sorted block keys -> member rid runs), i.e.
-  ``pairs.build_blocks`` of the union's accepted assignments, maintained
-  by splicing only blocks whose membership changed,
-- the candidate-pair ledger (packed ``a << 32 | b`` u64 keys -> size of
-  the largest source block), i.e. ``pairs.dedupe_pairs`` of the CSR,
-  maintained from per-ingest pair deltas.
+- the accepted-blocks CSR (``BlockCsr``: sorted block keys -> member rid
+  runs), i.e. ``pairs.build_blocks`` of the union's accepted assignments,
+  maintained by splicing only blocks whose membership changed,
+- the candidate-pair ledger (``PairLedger``: packed ``a << 32 | b`` u64
+  keys -> size of the largest source block), i.e. ``pairs.dedupe_pairs``
+  of the CSR, maintained from per-ingest pair deltas.
+
+The key space, CSR, and ledger are *interfaces* as well as containers:
+``DeltaBlocker`` only talks to them through ``LevelState`` delegation and
+the ``BlockStore`` surface (``update_keytab`` / ``lookup`` / ``oversized``
+/ ``block_size_of`` / ``ledger_src`` / ...), never raw arrays. That seam
+is what lets ``streaming.shard.ShardedBlockStore`` swap in
+fingerprint-partitioned slices (one ``LevelKeys``/``BlockCsr``/
+``PairLedger`` per shard, routed by ``splitmix64(key) % n_shards``)
+without the delta algorithm changing — see ``streaming/shard.py``.
 
 All arrays are host numpy; the delta blocker stages fixed-shape slices
 through the same jitted functions the batch path uses. See
@@ -32,7 +40,7 @@ the update algorithm.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,6 +92,32 @@ def blocks_from_segments(key64: np.ndarray, sizes: np.ndarray,
                             members.astype(np.int64))
 
 
+def merge_blocks(parts: Sequence[pairs_mod.Blocks]) -> pairs_mod.Blocks:
+    """Merge per-shard CSR slices (disjoint keys) into one key-sorted CSR.
+
+    The sharded store's output contract: every merged view must be
+    bit-identical to the single-host store's, so the concatenated parts
+    are re-sorted by packed key (keys are disjoint across shards — the
+    partition function guarantees it — so the order is total).
+    """
+    parts = [b for b in parts if b.num_blocks]
+    if not parts:
+        z64 = np.zeros((0,), np.uint64)
+        return blocks_from_segments(z64, np.zeros((0,), np.int64),
+                                    np.zeros((0,), np.int64))
+    key64 = np.concatenate([
+        (b.key_hi.astype(np.uint64) << np.uint64(32))
+        | b.key_lo.astype(np.uint64) for b in parts])
+    sizes = np.concatenate([b.size for b in parts]).astype(np.int64)
+    offs = np.cumsum([0] + [len(b.members) for b in parts])[:-1]
+    starts = np.concatenate([b.start + off
+                             for b, off in zip(parts, offs)]).astype(np.int64)
+    pool = np.concatenate([b.members for b in parts])
+    order = np.argsort(key64)
+    members = gather_segments(starts[order], sizes[order], pool)
+    return blocks_from_segments(key64[order], sizes[order], members)
+
+
 def searchsorted_mask(sorted_arr: np.ndarray, queries: np.ndarray
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """(positions, found_mask) of ``queries`` in a sorted array."""
@@ -133,111 +167,59 @@ def reduce_by_key(keys: np.ndarray, cnt: np.ndarray, fp: np.ndarray
 
 
 @dataclasses.dataclass
-class LevelState:
-    """Cached union state at one HDB iteration level (see module doc)."""
+class LevelKeys:
+    """One key-space slice at one level: CMS + exact key table.
 
-    width: int
-    rids: np.ndarray      # (R,) int64, sorted
-    keys: np.ndarray      # (R, W, 2) uint32, sentinel where ~valid
-    key64: np.ndarray     # (R, W) uint64 packed mirror of keys
-    valid: np.ndarray     # (R, W) bool
-    psize: np.ndarray     # (R, W) int32
-    idx: np.ndarray       # (depth, R, W) int32 CMS bucket indices
-    right: np.ndarray     # (R, W) bool  CMS says right-sized
-    keep: np.ndarray      # (R, W) bool  survives rough detection
-    accept: np.ndarray    # (R, W) bool  accepted assignment
-    survive: np.ndarray   # (R, W) bool  on a surviving over-sized block
-    size: np.ndarray      # (R, W) int32 exact keep-count (0 where ~keep)
+    This is the unit of sharding: the single-host store has exactly one
+    per level; ``ShardedLevelKeys`` composes N of them (each owning the
+    keys whose fingerprint routes to its shard) behind the same method
+    surface. All methods take/return host numpy.
+    """
+
     cms: np.ndarray       # (depth, width) int32
     tab_key: np.ndarray   # (K,) uint64, sorted
     tab_cnt: np.ndarray   # (K,) int64
     tab_fp: np.ndarray    # (K,) uint64
     tab_surv: np.ndarray  # (K,) bool
 
-    @property
-    def num_rows(self) -> int:
-        return len(self.rids)
-
-    @property
-    def num_entries(self) -> int:
-        return int(self.valid.sum())
-
     @staticmethod
-    def empty(width: int, cms_cfg: sketches.CMSConfig) -> "LevelState":
-        depth = cms_cfg.depth
-        return LevelState(
-            width=width,
-            rids=np.zeros((0,), np.int64),
-            keys=np.zeros((0, width, 2), np.uint32),
-            key64=np.zeros((0, width), np.uint64),
-            valid=np.zeros((0, width), bool),
-            psize=np.zeros((0, width), np.int32),
-            idx=np.zeros((depth, 0, width), np.int32),
-            right=np.zeros((0, width), bool),
-            keep=np.zeros((0, width), bool),
-            accept=np.zeros((0, width), bool),
-            survive=np.zeros((0, width), bool),
-            size=np.zeros((0, width), np.int32),
-            cms=np.zeros((depth, cms_cfg.width), np.int32),
+    def empty(cms_cfg: sketches.CMSConfig) -> "LevelKeys":
+        return LevelKeys(
+            cms=np.zeros((cms_cfg.depth, cms_cfg.width), np.int32),
             tab_key=np.zeros((0,), np.uint64),
             tab_cnt=np.zeros((0,), np.int64),
             tab_fp=np.zeros((0,), np.uint64),
             tab_surv=np.zeros((0,), bool),
         )
 
-    def row_index(self, rids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(row positions, found mask) for record ids."""
-        return searchsorted_mask(self.rids, np.asarray(rids, np.int64))
+    # ---- CMS (linear sketch: fold-in/out = elementwise +/-) ----
 
-    def drop_rows(self, rows: np.ndarray) -> None:
-        keep = np.ones(len(self.rids), bool)
-        keep[rows] = False
-        self.rids = self.rids[keep]
-        self.keys = self.keys[keep]
-        self.key64 = self.key64[keep]
-        self.valid = self.valid[keep]
-        self.psize = self.psize[keep]
-        self.idx = self.idx[:, keep]
-        self.right = self.right[keep]
-        self.keep = self.keep[keep]
-        self.accept = self.accept[keep]
-        self.survive = self.survive[keep]
-        self.size = self.size[keep]
+    def cms_apply(self, key64: np.ndarray, idx: np.ndarray,
+                  sign: int) -> None:
+        """Fold entry occurrences in (+1) or out (-1) of the sketch.
 
-    def append_rows(self, rids, keys, key64, valid, psize, idx) -> None:
-        n = len(rids)
-        w = self.width
-        self.rids = np.concatenate([self.rids, np.asarray(rids, np.int64)])
-        self.keys = np.concatenate([self.keys, keys])
-        self.key64 = np.concatenate([self.key64, key64])
-        self.valid = np.concatenate([self.valid, valid])
-        self.psize = np.concatenate([self.psize, psize])
-        self.idx = np.concatenate([self.idx, idx], axis=1)
-        zb = np.zeros((n, w), bool)
-        zi = np.zeros((n, w), np.int32)
-        self.right = np.concatenate([self.right, zb])
-        self.keep = np.concatenate([self.keep, zb.copy()])
-        self.accept = np.concatenate([self.accept, zb.copy()])
-        self.survive = np.concatenate([self.survive, zb.copy()])
-        self.size = np.concatenate([self.size, zi])
-        order = np.argsort(self.rids, kind="stable")
-        if not np.array_equal(order, np.arange(len(order))):
-            self.rids = self.rids[order]
-            self.keys = self.keys[order]
-            self.key64 = self.key64[order]
-            self.valid = self.valid[order]
-            self.psize = self.psize[order]
-            self.idx = self.idx[:, order]
-            self.right = self.right[order]
-            self.keep = self.keep[order]
-            self.accept = self.accept[order]
-            self.survive = self.survive[order]
-            self.size = self.size[order]
+        ``key64`` is the entries' packed keys (unused here; the sharded
+        key space routes on it) and ``idx`` their (depth, M) cached
+        bucket indices.
+        """
+        del key64
+        for j in range(len(self.cms)):
+            np.add.at(self.cms[j], idx[j], sign)
+
+    def cms_lookup(self, idx: np.ndarray) -> np.ndarray:
+        """Gather per-depth bucket counts: (depth, *entry_shape) int32."""
+        return np.stack([self.cms[j][idx[j]] for j in range(len(self.cms))])
+
+    # ---- exact key table ----
 
     def update_keytab(self, d_key: np.ndarray, d_cnt: np.ndarray,
                       d_fp: np.ndarray) -> np.ndarray:
         """Apply aggregated (count, fingerprint) deltas; returns the keys
-        whose table row changed (including inserts and deletions)."""
+        whose table row changed (including inserts and deletions).
+
+        ``d_key`` must be sorted unique (``reduce_by_key`` output order) —
+        ``np.insert`` relies on it to keep the table sorted.
+        """
         if len(d_key) == 0:
             return d_key
         pos, found = searchsorted_mask(self.tab_key, d_key)
@@ -288,6 +270,357 @@ class LevelState:
         return np.where(found, self.tab_fp[safe],
                         np.uint64(0)).reshape(key64.shape)
 
+    def oversized(self, max_block_size: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(key, count, fingerprint) of over-sized table rows, key-sorted.
+
+        Key order is part of the bit-identity contract: the duplicate-
+        block survivor pass feeds these to ``hdb.survivor_reps`` and must
+        see the same order regardless of how the key space is sharded.
+        """
+        over = self.tab_cnt > max_block_size
+        return self.tab_key[over], self.tab_cnt[over], self.tab_fp[over]
+
+    def set_survivors(self, over_key: np.ndarray,
+                      surv: np.ndarray) -> np.ndarray:
+        """Replace ALL survivor flags (rows not in ``over_key`` clear);
+        returns the keys whose flag flipped."""
+        new_surv = np.zeros(len(self.tab_key), bool)
+        if len(over_key):
+            pos, found = searchsorted_mask(self.tab_key, over_key)
+            new_surv[pos[found]] = surv[found]
+        changed = new_surv != self.tab_surv
+        self.tab_surv = new_surv
+        return self.tab_key[changed]
+
+    @property
+    def num_keys(self) -> int:
+        return len(self.tab_key)
+
+    @property
+    def keytab_bytes(self) -> int:
+        return (self.tab_key.nbytes + self.tab_cnt.nbytes
+                + self.tab_fp.nbytes + self.tab_surv.nbytes)
+
+    @property
+    def cms_bytes(self) -> int:
+        return self.cms.nbytes
+
+
+class BlockCsr:
+    """Accepted-blocks CSR: sorted block keys -> member-rid runs.
+
+    == ``pairs.build_blocks(min_size=1)`` of the union's accepted
+    assignments, spliced per ingest only where membership changed. One
+    per store — or one per shard, holding the keys that shard owns.
+    """
+
+    def __init__(self):
+        self.key = np.zeros((0,), np.uint64)
+        self.start = np.zeros((0,), np.int64)
+        self.size = np.zeros((0,), np.int64)
+        self.members = np.zeros((0,), np.int64)
+
+    def members_of(self, key64: np.ndarray) -> List[np.ndarray]:
+        """Member rid arrays per query block key (empty when absent)."""
+        out = []
+        pos, found = searchsorted_mask(self.key, np.asarray(key64, np.uint64))
+        for p, f in zip(pos, found):
+            if f:
+                s = self.start[p]
+                out.append(self.members[s:s + self.size[p]])
+            else:
+                out.append(np.zeros((0,), np.int64))
+        return out
+
+    def affected_slice(self, keys: np.ndarray) -> pairs_mod.Blocks:
+        """CSR restricted to ``keys`` (sorted unique), for the pair engine."""
+        pos, found = searchsorted_mask(self.key, keys)
+        pos = pos[found]
+        members = gather_segments(self.start[pos], self.size[pos],
+                                  self.members)
+        return blocks_from_segments(self.key[pos], self.size[pos], members)
+
+    def size_of(self, key64: np.ndarray) -> np.ndarray:
+        """int64 block size per query key (0 when absent)."""
+        if len(self.key) == 0:
+            return np.zeros(len(key64), np.int64)
+        pos, found = searchsorted_mask(self.key, key64)
+        return np.where(found, self.size[np.minimum(pos, len(self.key) - 1)],
+                        0).astype(np.int64)
+
+    def splice(self, add_k: np.ndarray, add_r: np.ndarray,
+               ret_k: np.ndarray, ret_r: np.ndarray,
+               snapshot_keys: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, pairs_mod.Blocks, pairs_mod.Blocks]:
+        """Splice accepted-assignment adds/retracts into the CSR.
+
+        Returns (affected_keys_sorted, old_snapshot_csr, new_affected_csr).
+        The old snapshot covers ``snapshot_keys`` (default: all affected
+        keys) as they were BEFORE the splice; the new slice covers all
+        affected keys after.
+        """
+        affected = np.unique(np.concatenate([add_k, ret_k]))
+        old_csr = self.affected_slice(
+            affected if snapshot_keys is None else snapshot_keys)
+
+        # rebuild the affected keys' member lists
+        pos, found = searchsorted_mask(self.key, affected)
+        aff_pos = pos[found]
+        old_sizes = self.size[aff_pos]
+        old_k = np.repeat(self.key[aff_pos], old_sizes)
+        old_r = gather_segments(self.start[aff_pos], old_sizes, self.members)
+        cand_k = np.concatenate([old_k, add_k])
+        cand_r = np.concatenate([old_r, add_r])
+        new_k, new_r = set_subtract_pairs(cand_k, cand_r, ret_k, ret_r)
+        uk_starts = np.flatnonzero(
+            np.concatenate([[True], new_k[1:] != new_k[:-1]])
+        ) if len(new_k) else np.zeros((0,), np.int64)
+        uk = new_k[uk_starts]
+        usz = np.diff(np.concatenate([uk_starts, [len(new_k)]])).astype(np.int64)
+
+        # new global CSR = unaffected segments merged with rebuilt segments
+        unaff = np.ones(len(self.key), bool)
+        unaff[aff_pos] = False
+        pool = np.concatenate([self.members, new_r])
+        seg_key = np.concatenate([self.key[unaff], uk])
+        seg_start = np.concatenate(
+            [self.start[unaff],
+             len(self.members) + np.concatenate([[0], np.cumsum(usz)])[:-1]]
+        ).astype(np.int64)
+        seg_size = np.concatenate([self.size[unaff], usz])
+        order = np.argsort(seg_key, kind="stable")
+        seg_key = seg_key[order]
+        seg_start = seg_start[order]
+        seg_size = seg_size[order]
+        self.members = gather_segments(seg_start, seg_size, pool)
+        self.key = seg_key
+        self.size = seg_size
+        self.start = (np.concatenate([[0], np.cumsum(seg_size)])[:-1]
+                      .astype(np.int64))
+
+        new_csr = blocks_from_segments(uk, usz, new_r)
+        return affected, old_csr, new_csr
+
+    def view(self, min_size: int = 1) -> pairs_mod.Blocks:
+        """The CSR as a Blocks slice restricted to ``size >= min_size``."""
+        keep = self.size >= min_size
+        members = gather_segments(self.start[keep], self.size[keep],
+                                  self.members)
+        return blocks_from_segments(self.key[keep], self.size[keep], members)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.key)
+
+    @property
+    def num_assignments(self) -> int:
+        return len(self.members)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.key.nbytes + self.start.nbytes + self.size.nbytes
+                + self.members.nbytes)
+
+
+class PairLedger:
+    """Candidate-pair ledger: packed pair u64 -> largest source block size.
+
+    == ``pairs.dedupe_pairs`` of the accepted-blocks CSR, maintained from
+    per-ingest pair deltas. One per store — or one per shard, holding the
+    pairs whose fingerprint routes to it.
+    """
+
+    def __init__(self):
+        self.pack = np.zeros((0,), np.uint64)
+        self.src = np.zeros((0,), np.int64)
+
+    def apply(self, pair_pack: np.ndarray, src: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Upsert/retract affected pairs; ``src == 0`` means uncovered.
+
+        Returns (added_pack, added_src, retracted_pack), each sorted.
+        """
+        if len(pair_pack) == 0:
+            z = np.zeros((0,), np.uint64)
+            return z, np.zeros((0,), np.int64), z
+        order = np.argsort(pair_pack)
+        pair_pack, src = pair_pack[order], src[order]
+        pos, found = searchsorted_mask(self.pack, pair_pack)
+        to_del = found & (src == 0)
+        to_upd = found & (src > 0)
+        to_ins = ~found & (src > 0)
+        retracted = pair_pack[to_del]
+        if np.any(to_upd):
+            self.src[pos[to_upd]] = src[to_upd]
+        if np.any(to_ins):
+            at = pos[to_ins]
+            self.pack = np.insert(self.pack, at, pair_pack[to_ins])
+            self.src = np.insert(self.src, at, src[to_ins])
+        if np.any(to_del):
+            # positions shift after insert; recompute by search
+            dpos, dfound = searchsorted_mask(self.pack, retracted)
+            keep = np.ones(len(self.pack), bool)
+            keep[dpos[dfound]] = False
+            self.pack = self.pack[keep]
+            self.src = self.src[keep]
+        return pair_pack[to_ins], src[to_ins], retracted
+
+    def src_of(self, pack: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(current src size, found mask) per packed pair (0 when absent)."""
+        if len(self.pack) == 0:
+            return (np.zeros(len(pack), np.int64),
+                    np.zeros(len(pack), bool))
+        pos, found = searchsorted_mask(self.pack, pack)
+        cur = np.zeros(len(pack), np.int64)
+        cur[found] = self.src[np.minimum(pos, len(self.pack) - 1)][found]
+        return cur, found
+
+    @property
+    def num_pairs(self) -> int:
+        return len(self.pack)
+
+    @property
+    def nbytes(self) -> int:
+        return self.pack.nbytes + self.src.nbytes
+
+
+@dataclasses.dataclass
+class LevelState:
+    """Cached union state at one HDB iteration level (see module doc).
+
+    Row state (everything per (record, key-slot)) lives here; the key
+    space (CMS + key table) lives in ``keyspace`` — a ``LevelKeys`` on the
+    single-host store or a ``streaming.shard.ShardedLevelKeys`` on the
+    sharded one. The delegation methods below are the ONLY key-space
+    surface the delta algorithm uses, which is what makes the two
+    interchangeable.
+    """
+
+    width: int
+    rids: np.ndarray      # (R,) int64, sorted
+    keys: np.ndarray      # (R, W, 2) uint32, sentinel where ~valid
+    key64: np.ndarray     # (R, W) uint64 packed mirror of keys
+    valid: np.ndarray     # (R, W) bool
+    psize: np.ndarray     # (R, W) int32
+    idx: np.ndarray       # (depth, R, W) int32 CMS bucket indices
+    right: np.ndarray     # (R, W) bool  CMS says right-sized
+    keep: np.ndarray      # (R, W) bool  survives rough detection
+    accept: np.ndarray    # (R, W) bool  accepted assignment
+    survive: np.ndarray   # (R, W) bool  on a surviving over-sized block
+    size: np.ndarray      # (R, W) int32 exact keep-count (0 where ~keep)
+    keyspace: LevelKeys   # CMS + key table (or a sharded composite)
+
+    @property
+    def num_rows(self) -> int:
+        return len(self.rids)
+
+    @property
+    def num_entries(self) -> int:
+        return int(self.valid.sum())
+
+    @staticmethod
+    def empty(width: int, cms_cfg: sketches.CMSConfig,
+              keyspace: Optional[LevelKeys] = None) -> "LevelState":
+        depth = cms_cfg.depth
+        return LevelState(
+            width=width,
+            rids=np.zeros((0,), np.int64),
+            keys=np.zeros((0, width, 2), np.uint32),
+            key64=np.zeros((0, width), np.uint64),
+            valid=np.zeros((0, width), bool),
+            psize=np.zeros((0, width), np.int32),
+            idx=np.zeros((depth, 0, width), np.int32),
+            right=np.zeros((0, width), bool),
+            keep=np.zeros((0, width), bool),
+            accept=np.zeros((0, width), bool),
+            survive=np.zeros((0, width), bool),
+            size=np.zeros((0, width), np.int32),
+            keyspace=LevelKeys.empty(cms_cfg) if keyspace is None
+            else keyspace,
+        )
+
+    # ---- key-space delegation (the delta algorithm's only key-space API) --
+
+    def cms_apply(self, key64: np.ndarray, idx: np.ndarray,
+                  sign: int) -> None:
+        self.keyspace.cms_apply(key64, idx, sign)
+
+    def cms_lookup(self, idx: np.ndarray) -> np.ndarray:
+        return self.keyspace.cms_lookup(idx)
+
+    def update_keytab(self, d_key: np.ndarray, d_cnt: np.ndarray,
+                      d_fp: np.ndarray) -> np.ndarray:
+        return self.keyspace.update_keytab(d_key, d_cnt, d_fp)
+
+    def lookup(self, key64: np.ndarray):
+        return self.keyspace.lookup(key64)
+
+    def lookup_fp(self, key64: np.ndarray) -> np.ndarray:
+        return self.keyspace.lookup_fp(key64)
+
+    def oversized(self, max_block_size: int):
+        return self.keyspace.oversized(max_block_size)
+
+    def set_survivors(self, over_key: np.ndarray,
+                      surv: np.ndarray) -> np.ndarray:
+        return self.keyspace.set_survivors(over_key, surv)
+
+    @property
+    def num_keys(self) -> int:
+        return self.keyspace.num_keys
+
+    # ---- row state ----
+
+    def row_index(self, rids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(row positions, found mask) for record ids."""
+        return searchsorted_mask(self.rids, np.asarray(rids, np.int64))
+
+    def drop_rows(self, rows: np.ndarray) -> None:
+        keep = np.ones(len(self.rids), bool)
+        keep[rows] = False
+        self.rids = self.rids[keep]
+        self.keys = self.keys[keep]
+        self.key64 = self.key64[keep]
+        self.valid = self.valid[keep]
+        self.psize = self.psize[keep]
+        self.idx = self.idx[:, keep]
+        self.right = self.right[keep]
+        self.keep = self.keep[keep]
+        self.accept = self.accept[keep]
+        self.survive = self.survive[keep]
+        self.size = self.size[keep]
+
+    def append_rows(self, rids, keys, key64, valid, psize, idx) -> None:
+        n = len(rids)
+        w = self.width
+        self.rids = np.concatenate([self.rids, np.asarray(rids, np.int64)])
+        self.keys = np.concatenate([self.keys, keys])
+        self.key64 = np.concatenate([self.key64, key64])
+        self.valid = np.concatenate([self.valid, valid])
+        self.psize = np.concatenate([self.psize, psize])
+        self.idx = np.concatenate([self.idx, idx], axis=1)
+        zb = np.zeros((n, w), bool)
+        zi = np.zeros((n, w), np.int32)
+        self.right = np.concatenate([self.right, zb])
+        self.keep = np.concatenate([self.keep, zb.copy()])
+        self.accept = np.concatenate([self.accept, zb.copy()])
+        self.survive = np.concatenate([self.survive, zb.copy()])
+        self.size = np.concatenate([self.size, zi])
+        order = np.argsort(self.rids, kind="stable")
+        if not np.array_equal(order, np.arange(len(order))):
+            self.rids = self.rids[order]
+            self.keys = self.keys[order]
+            self.key64 = self.key64[order]
+            self.valid = self.valid[order]
+            self.psize = self.psize[order]
+            self.idx = self.idx[:, order]
+            self.right = self.right[order]
+            self.keep = self.keep[order]
+            self.accept = self.accept[order]
+            self.survive = self.survive[order]
+            self.size = self.size[order]
+
 
 class BlockStore:
     """Persistent blocking state for streaming ingest + candidate queries."""
@@ -297,13 +630,37 @@ class BlockStore:
         self.num_records = 0
         self.levels: List[Optional[LevelState]] = [None] * cfg.max_iterations
         # accepted blocks CSR (== pairs.build_blocks(min_size=1) of the union)
-        self.bk_key = np.zeros((0,), np.uint64)
-        self.bk_start = np.zeros((0,), np.int64)
-        self.bk_size = np.zeros((0,), np.int64)
-        self.bk_members = np.zeros((0,), np.int64)
+        self.csr = BlockCsr()
         # candidate-pair ledger (== pairs.dedupe_pairs of the CSR, exact)
-        self.led_pack = np.zeros((0,), np.uint64)
-        self.led_src = np.zeros((0,), np.int64)
+        self.ledger = PairLedger()
+
+    # ------------------------------------------------------------------
+    # back-compat array views (benches / data pipeline read these)
+    # ------------------------------------------------------------------
+
+    @property
+    def bk_key(self) -> np.ndarray:
+        return self.csr.key
+
+    @property
+    def bk_start(self) -> np.ndarray:
+        return self.csr.start
+
+    @property
+    def bk_size(self) -> np.ndarray:
+        return self.csr.size
+
+    @property
+    def bk_members(self) -> np.ndarray:
+        return self.csr.members
+
+    @property
+    def led_pack(self) -> np.ndarray:
+        return self.ledger.pack
+
+    @property
+    def led_src(self) -> np.ndarray:
+        return self.ledger.src
 
     # ------------------------------------------------------------------
     # level access
@@ -327,24 +684,15 @@ class BlockStore:
 
     def members_of(self, key64: np.ndarray) -> List[np.ndarray]:
         """Member rid arrays per query block key (empty when absent)."""
-        out = []
-        pos, found = searchsorted_mask(self.bk_key, np.asarray(key64, np.uint64))
-        for p, f in zip(pos, found):
-            if f:
-                s = self.bk_start[p]
-                out.append(self.bk_members[s:s + self.bk_size[p]])
-            else:
-                out.append(np.zeros((0,), np.int64))
-        return out
+        return self.csr.members_of(key64)
 
     def affected_slice(self, keys: np.ndarray) -> pairs_mod.Blocks:
         """CSR restricted to ``keys`` (sorted unique), for the pair engine."""
-        pos, found = searchsorted_mask(self.bk_key, keys)
-        pos = pos[found]
-        members = gather_segments(self.bk_start[pos], self.bk_size[pos],
-                                  self.bk_members)
-        return blocks_from_segments(self.bk_key[pos], self.bk_size[pos],
-                                    members)
+        return self.csr.affected_slice(keys)
+
+    def block_size_of(self, key64: np.ndarray) -> np.ndarray:
+        """int64 accepted-block size per query key (0 when absent)."""
+        return self.csr.size_of(key64)
 
     def apply_assignment_deltas(self, add_k: np.ndarray, add_r: np.ndarray,
                                 ret_k: np.ndarray, ret_r: np.ndarray,
@@ -353,53 +701,10 @@ class BlockStore:
                                            pairs_mod.Blocks]:
         """Splice accepted-assignment adds/retracts into the blocks CSR.
 
-        Returns (affected_keys_sorted, old_snapshot_csr, new_affected_csr).
-        The old snapshot covers ``snapshot_keys`` (default: all affected
-        keys) as they were BEFORE the splice; the new slice covers all
-        affected keys after.
+        Returns (affected_keys_sorted, old_snapshot_csr, new_affected_csr)
+        — see ``BlockCsr.splice``.
         """
-        affected = np.unique(np.concatenate([add_k, ret_k]))
-        old_csr = self.affected_slice(
-            affected if snapshot_keys is None else snapshot_keys)
-
-        # rebuild the affected keys' member lists
-        pos, found = searchsorted_mask(self.bk_key, affected)
-        aff_pos = pos[found]
-        old_sizes = self.bk_size[aff_pos]
-        old_k = np.repeat(self.bk_key[aff_pos], old_sizes)
-        old_r = gather_segments(self.bk_start[aff_pos], old_sizes,
-                                self.bk_members)
-        cand_k = np.concatenate([old_k, add_k])
-        cand_r = np.concatenate([old_r, add_r])
-        new_k, new_r = set_subtract_pairs(cand_k, cand_r, ret_k, ret_r)
-        uk_starts = np.flatnonzero(
-            np.concatenate([[True], new_k[1:] != new_k[:-1]])
-        ) if len(new_k) else np.zeros((0,), np.int64)
-        uk = new_k[uk_starts]
-        usz = np.diff(np.concatenate([uk_starts, [len(new_k)]])).astype(np.int64)
-
-        # new global CSR = unaffected segments merged with rebuilt segments
-        unaff = np.ones(len(self.bk_key), bool)
-        unaff[aff_pos] = False
-        pool = np.concatenate([self.bk_members, new_r])
-        seg_key = np.concatenate([self.bk_key[unaff], uk])
-        seg_start = np.concatenate(
-            [self.bk_start[unaff],
-             len(self.bk_members) + np.concatenate([[0], np.cumsum(usz)])[:-1]]
-        ).astype(np.int64)
-        seg_size = np.concatenate([self.bk_size[unaff], usz])
-        order = np.argsort(seg_key, kind="stable")
-        seg_key = seg_key[order]
-        seg_start = seg_start[order]
-        seg_size = seg_size[order]
-        self.bk_members = gather_segments(seg_start, seg_size, pool)
-        self.bk_key = seg_key
-        self.bk_size = seg_size
-        self.bk_start = (np.concatenate([[0], np.cumsum(seg_size)])[:-1]
-                         .astype(np.int64))
-
-        new_csr = blocks_from_segments(uk, usz, new_r)
-        return affected, old_csr, new_csr
+        return self.csr.splice(add_k, add_r, ret_k, ret_r, snapshot_keys)
 
     # ------------------------------------------------------------------
     # ledger
@@ -411,30 +716,11 @@ class BlockStore:
 
         Returns (added_pack, added_src, retracted_pack).
         """
-        if len(pair_pack) == 0:
-            z = np.zeros((0,), np.uint64)
-            return z, np.zeros((0,), np.int64), z
-        order = np.argsort(pair_pack)
-        pair_pack, src = pair_pack[order], src[order]
-        pos, found = searchsorted_mask(self.led_pack, pair_pack)
-        to_del = found & (src == 0)
-        to_upd = found & (src > 0)
-        to_ins = ~found & (src > 0)
-        retracted = pair_pack[to_del]
-        if np.any(to_upd):
-            self.led_src[pos[to_upd]] = src[to_upd]
-        if np.any(to_ins):
-            at = pos[to_ins]
-            self.led_pack = np.insert(self.led_pack, at, pair_pack[to_ins])
-            self.led_src = np.insert(self.led_src, at, src[to_ins])
-        if np.any(to_del):
-            # positions shift after insert; recompute by search
-            dpos, dfound = searchsorted_mask(self.led_pack, retracted)
-            keep = np.ones(len(self.led_pack), bool)
-            keep[dpos[dfound]] = False
-            self.led_pack = self.led_pack[keep]
-            self.led_src = self.led_src[keep]
-        return pair_pack[to_ins], src[to_ins], retracted
+        return self.ledger.apply(pair_pack, src)
+
+    def ledger_src(self, pack: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(current src size, found mask) per packed pair (0 when absent)."""
+        return self.ledger.src_of(pack)
 
     # ------------------------------------------------------------------
     # views
@@ -442,11 +728,7 @@ class BlockStore:
 
     def accepted_blocks(self, min_size: int = 1) -> pairs_mod.Blocks:
         """Current union accepted blocks (== build_blocks of a batch run)."""
-        keep = self.bk_size >= min_size
-        members = gather_segments(self.bk_start[keep], self.bk_size[keep],
-                                  self.bk_members)
-        return blocks_from_segments(self.bk_key[keep], self.bk_size[keep],
-                                    members)
+        return self.csr.view(min_size)
 
     def candidate_pairs(self) -> pairs_mod.PairSet:
         """Current candidate-pair set (== dedupe_pairs of a batch run)."""
@@ -460,9 +742,16 @@ class BlockStore:
                "ledger_pairs": len(self.led_pack),
                "accepted_blocks": len(self.bk_key),
                "accepted_assignments": len(self.bk_members)}
+        keytab_bytes = cms_bytes = 0
         for i, st in enumerate(self.levels):
             if st is not None:
                 out[f"level{i}_rows"] = st.num_rows
                 out[f"level{i}_entries"] = st.num_entries
-                out[f"level{i}_keys"] = len(st.tab_key)
+                out[f"level{i}_keys"] = st.num_keys
+                keytab_bytes += st.keyspace.keytab_bytes
+                cms_bytes += st.keyspace.cms_bytes
+        out["keytab_bytes"] = keytab_bytes
+        out["cms_bytes"] = cms_bytes
+        out["csr_bytes"] = self.csr.nbytes
+        out["ledger_bytes"] = self.ledger.nbytes
         return out

@@ -1,0 +1,141 @@
+"""Subprocess worker: mesh-routed sharded streaming store parity.
+
+On 8 emulated host devices: a ``ShardedBlockStore`` with a live mesh
+(key-table deltas exchanged with ``route_buckets`` + one ``all_to_all``
+per level, pair-ledger syncs through ``dedupe_pairs_distributed``) must
+stay bit-identical to the single-host ``DeltaBlocker`` AND to one batch
+HDB run on the union, on flat/pod/3axis meshes. The ``overflow`` mode
+forces the key-exchange bucket overflow and asserts the fallback is loud
+(``RepCapacityWarning`` + counter) and lossless.
+
+Invoked by test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 in the child env.
+"""
+import os
+import sys
+import warnings
+
+assert "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as blocks_mod
+from repro.core import hdb as hdb_mod
+from repro.core import pairs as pairs_mod
+from repro.core.hdb import RepCapacityWarning
+from repro.streaming.delta import DeltaBlocker
+from repro.streaming.shard import ShardedBlockStore
+from repro.streaming.store import BlockStore, pack_pair
+
+CFG = hdb_mod.HDBConfig(max_block_size=8, max_iterations=5,
+                        max_oversize_keys=6, cms_width=1 << 10)
+
+
+def random_keys(rng, n, k, card, pvalid=0.85):
+    """Mirror of test_streaming._random_keys (low-cardinality layout)."""
+    k64 = (rng.integers(0, card, (n, k)).astype(np.uint64)
+           * np.uint64(0x9E3779B97F4A7C15))
+    valid = rng.random((n, k)) < pvalid
+    keys = np.stack([(k64 >> np.uint64(32)).astype(np.uint32),
+                     (k64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)], -1)
+    keys[~valid] = 0xFFFFFFFF
+    h, lo, v = blocks_mod.dedupe_row_keys(
+        jnp.asarray(keys[..., 0]), jnp.asarray(keys[..., 1]),
+        jnp.asarray(valid))
+    return np.stack([np.asarray(h), np.asarray(lo)], -1), np.asarray(v)
+
+
+def batch_ledger(keys, valid):
+    res = hdb_mod.hashed_dynamic_blocking(jnp.asarray(keys),
+                                          jnp.asarray(valid), CFG)
+    blk = pairs_mod.build_blocks(res)
+    ps = pairs_mod.dedupe_pairs(blk, budget=blk.num_pair_slots + 1)
+    pack = pack_pair(ps.a, ps.b)
+    order = np.argsort(pack)
+    return pack[order], ps.src_size[order]
+
+
+def run_parity(tag, mesh, axes, n_shards, route_slack, expect_fallback,
+               n=120, card=20, min_pairs=50):
+    rng = np.random.default_rng(17)
+    keys, valid = random_keys(rng, n, 5, card)
+    ref = BlockStore(CFG)
+    rblk = DeltaBlocker(ref)
+    st = ShardedBlockStore(CFG, n_shards=n_shards, mesh=mesh,
+                           axis_names=axes, route_slack=route_slack)
+    sblk = DeltaBlocker(st)
+    assert sblk.mesh is mesh  # the store's mesh drives the ledger sync
+    cuts = [0, n // 4 + 1, n // 2, 3 * n // 4 + 1, n]
+    caught_fallback = 0
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        rblk.ingest_keys(keys[a:b], valid[a:b])
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            sblk.ingest_keys(keys[a:b], valid[a:b])
+        caught_fallback += sum(
+            issubclass(x.category, RepCapacityWarning) for x in w)
+
+    np.testing.assert_array_equal(st.led_pack, ref.led_pack, err_msg=tag)
+    np.testing.assert_array_equal(st.led_src, ref.led_src, err_msg=tag)
+    want_pack, want_src = batch_ledger(keys, valid)
+    np.testing.assert_array_equal(st.led_pack, want_pack, err_msg=tag)
+    np.testing.assert_array_equal(st.led_src, want_src, err_msg=tag)
+    assert len(want_pack) > min_pairs, "layout too small to be a real test"
+    ga, gb = ref.accepted_blocks(1), st.accepted_blocks(1)
+    np.testing.assert_array_equal(ga.key_hi, gb.key_hi, err_msg=tag)
+    np.testing.assert_array_equal(ga.members, gb.members, err_msg=tag)
+
+    assert st.router.exchange_total > 0, tag
+    if expect_fallback:
+        assert st.router.exchange_fallback_total > 0, \
+            f"{tag}: tiny route_slack did not trip the exchange fallback"
+        assert caught_fallback > 0, f"{tag}: fallback was silent"
+    else:
+        assert st.router.exchange_fallback_total == 0, \
+            f"{tag}: unexpected routed-exchange fallback"
+
+    # read path parity, both probe modes (host-side, mesh-independent)
+    qk, qv = random_keys(rng, 12, 5, 20)
+    for ip in (False, True):
+        for r1, r2 in zip(rblk.query_keys(qk, qv, include_probe=ip),
+                          sblk.query_keys(qk, qv, include_probe=ip)):
+            np.testing.assert_array_equal(r1.candidates, r2.candidates)
+            np.testing.assert_array_equal(r1.block_sizes, r2.block_sizes)
+    print("OK-SHARD", tag)
+
+
+def main(mesh_kind: str):
+    if mesh_kind == "flat":
+        mesh = jax.make_mesh((8,), ("data",))
+        axes = ("data",)
+        run_parity("flat", mesh, axes, 8, 2.0, expect_fallback=False)
+        # 4-shard submesh: shard count decoupled from the full device set
+        from jax.sharding import Mesh
+        sub = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+        run_parity("flat-sub4", sub, ("data",), 4, 2.0,
+                   expect_fallback=False)
+    elif mesh_kind == "pod":
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        run_parity("pod", mesh, ("pod", "data"), 8, 2.0,
+                   expect_fallback=False)
+    elif mesh_kind == "3axis":
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        run_parity("3axis", mesh, ("pod", "data", "model"), 8, 2.0,
+                   expect_fallback=False)
+    elif mesh_kind == "overflow":
+        # enough distinct keys per exchange (~card per level) that the
+        # cap-floor bucket (8 lanes/dest) must overflow under tiny slack
+        mesh = jax.make_mesh((8,), ("data",))
+        run_parity("overflow", mesh, ("data",), 8, 0.01,
+                   expect_fallback=True, n=240, card=120, min_pairs=20)
+    else:
+        raise SystemExit(f"unknown mesh kind {mesh_kind!r}")
+    print("OK", mesh_kind)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "flat")
