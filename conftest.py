@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
 # arrays — while still allowing the explicit jnp.asarray/np.asarray/
 # device_get conversions the drivers are built around.
 TRANSFER_GUARDED_MODULES = {
+    "test_match_cluster",
     "test_pairs_engine",
     "test_serving",
     "test_sort_radix",

@@ -184,7 +184,10 @@ class PairSet:
         produced them, a single upload otherwise."""
         if self.device_a is not None:
             return self.device_a, self.device_b
-        return jnp.asarray(self.a), jnp.asarray(self.b)
+        # pre-cast host-side: uploading int64 under x64-off would be a
+        # dtype-coercing implicit transfer (repro.analysis R001)
+        return (jnp.asarray(np.asarray(self.a, np.int32)),
+                jnp.asarray(np.asarray(self.b, np.int32)))
 
 
 # ---------------------------------------------------------------------------

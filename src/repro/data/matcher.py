@@ -11,13 +11,27 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.blocks import TokenColumn
+from ..kernels.match import ops as match_ops
+
+# fused-match backend knob: "host" is the score-on-host parity baseline,
+# "jnp"/"pallas" keep the matched pair set on device (kernels/match);
+# "auto" currently resolves to the jnp mirror (interpret-mode Pallas is
+# emulation-speed on CPU — the same policy as the pairs/sort kernels)
+MATCH_BACKENDS = ("auto", "host", "jnp", "pallas")
+
+
+def resolve_match_backend(backend: str) -> str:
+    if backend not in MATCH_BACKENDS:
+        raise ValueError(
+            f"match_backend {backend!r} not in {MATCH_BACKENDS}")
+    return "jnp" if backend == "auto" else backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,17 +43,14 @@ class MatcherConfig:
 
 
 def _pair_jaccard(tok: jnp.ndarray, mask: jnp.ndarray, a: jnp.ndarray,
-                  b: jnp.ndarray) -> jnp.ndarray:
-    """Jaccard of padded token sets for record index pairs (a, b)."""
-    ta, ma = tok[a], mask[a]
-    tb, mb = tok[b], mask[b]
-    eq = (ta[:, :, None] == tb[:, None, :]) & ma[:, :, None] & mb[:, None, :]
-    inter = jnp.sum(jnp.any(eq, axis=2), axis=1)
-    na = jnp.sum(ma, axis=1)
-    nb = jnp.sum(mb, axis=1)
-    union = na + nb - inter
-    both = (na > 0) & (nb > 0)
-    return jnp.where(both, inter / jnp.maximum(union, 1), 0.0), both
+                  b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jaccard of padded token sets for record index pairs (a, b).
+
+    Returns ``(jaccard, present)``. Single-sourced from the fused match
+    kernel package so host scoring and the on-device fused path share
+    one float op sequence (the bit-identity contract, docs/PIPELINE.md).
+    """
+    return match_ops.pair_jaccard_jnp(tok, mask, a, b)
 
 
 @functools.partial(jax.jit, static_argnames=("bucket",))
@@ -55,15 +66,18 @@ def _gather_bucket(x: jnp.ndarray, start: jnp.ndarray, *,
 @functools.partial(jax.jit, static_argnames=("weights",))
 def _score_batch(tokens, masks, weights, a, b):
     # weights is a static tuple of python floats: traced scalars would be
-    # one implicit host->device upload apiece (repro.analysis R001)
-    total = jnp.zeros(a.shape, jnp.float32)
-    norm = jnp.zeros(a.shape, jnp.float32)
-    for i in range(len(weights)):
-        j, present = _pair_jaccard(tokens[i], masks[i], a, b)
-        w = weights[i]
-        total = total + w * j
-        norm = norm + jnp.where(present, w, 0.0)
-    return jnp.where(norm > 0, total / jnp.maximum(norm, 1e-6), 0.0)
+    # one implicit host->device upload apiece (repro.analysis R001).
+    # Delegates to the kernel package's mirror — one scoring source.
+    return match_ops.score_lanes_jnp(tokens, masks, weights, a, b)
+
+
+def _schema(columns: Dict[str, TokenColumn], cfg: MatcherConfig):
+    """Config-ordered (tokens, masks, weights) for the columns present."""
+    names = [n for n, _ in cfg.weights if n in columns]
+    tokens = tuple(columns[n].tokens for n in names)
+    masks = tuple(columns[n].mask for n in names)
+    weights = tuple(w for n, w in cfg.weights if n in columns)
+    return tokens, masks, weights
 
 
 def score_pairs(columns: Dict[str, TokenColumn], a, b,
@@ -79,10 +93,7 @@ def score_pairs(columns: Dict[str, TokenColumn], a, b,
     long-running service compiles a bounded set of kernels per column
     schema instead of one per pair-count.
     """
-    names = [n for n, _ in cfg.weights if n in columns]
-    tokens = tuple(columns[n].tokens for n in names)
-    masks = tuple(columns[n].mask for n in names)
-    weights = tuple(w for n, w in cfg.weights if n in columns)
+    tokens, masks, weights = _schema(columns, cfg)
     n_pairs = int(a.shape[0])
     out = np.empty(n_pairs, np.float32)
     on_device = isinstance(a, jax.Array)
@@ -111,5 +122,46 @@ def score_pairs(columns: Dict[str, TokenColumn], a, b,
 
 
 def match_pairs(columns, a, b, cfg: MatcherConfig = MatcherConfig()) -> np.ndarray:
-    """Boolean match decision per candidate pair."""
-    return score_pairs(columns, a, b, cfg) >= cfg.threshold
+    """Boolean match decision per candidate pair (host parity baseline).
+
+    Compares in float32: a bare python-float threshold would promote the
+    numpy comparison to f64 and could flip pairs that sit exactly on the
+    threshold relative to the device paths (which compare in f32).
+    """
+    return score_pairs(columns, a, b, cfg) >= np.float32(cfg.threshold)
+
+
+def match_compact(columns: Dict[str, TokenColumn], a, b,
+                  cfg: MatcherConfig = MatcherConfig(), *,
+                  backend: str = "auto",
+                  chunk: int = match_ops.DEFAULT_CHUNK,
+                  interpret: bool = True):
+    """Fused on-device match: score + threshold + compaction, no host hop.
+
+    ``a``/``b`` are the candidate pair list — device buffers
+    (``PairSet.pair_buffers()``, a streaming ingest's pair buffer) stay
+    on device; host numpy is pre-cast and uploaded explicitly once.
+    Returns device ``(ca, cb, count)``: the first ``count`` lanes of
+    ``ca``/``cb`` are the matched pairs in candidate order — the device
+    limb form of the packed ``a<<32|b`` ledger words
+    (``kernels.match.packed_host`` reassembles them) — and the tail is
+    (0, 0) padding that feeds straight into ``cluster_pairs_device`` as
+    frontier no-ops. Backend "pallas" runs the fused Pallas kernel
+    (interpret-mode off-TPU), "jnp"/"auto" the XLA mirror; both are
+    bit-identical to ``match_pairs``.
+    """
+    resolved = resolve_match_backend(backend)
+    if resolved == "host":
+        raise ValueError("match_compact is the device path; use "
+                         "match_pairs for the host baseline")
+    tokens, masks, weights = _schema(columns, cfg)
+    n_real = int(a.shape[0])
+    if not isinstance(a, jax.Array):
+        # pre-cast host-side then upload explicitly: dtype-coercing
+        # jnp.asarray is an implicit transfer (repro.analysis R001)
+        a = jnp.asarray(np.asarray(a, np.int32))
+        b = jnp.asarray(np.asarray(b, np.int32))
+    return match_ops.fused_match_pairs(
+        tokens, masks, weights, a, b, threshold=cfg.threshold,
+        n_real=n_real, chunk=chunk, use_kernel=(resolved == "pallas"),
+        interpret=interpret)

@@ -10,6 +10,13 @@ absorbs new records incrementally — blocking work proportional to the
 delta, matching only the new candidate pairs (scored from the device pair
 buffer), retraction-aware — and exposes the current survivors for the
 training-batch stream (see loader.py).
+
+Both run the back half (match -> filter -> cluster) behind a
+``match_backend`` knob: "host" is the original score-on-host parity
+baseline; "jnp"/"pallas" (and "auto") route through the fused
+``kernels/match`` + ``cluster_pairs_device`` path, where the pair list
+never crosses to the host — only final labels/survivors do. The two
+paths are bit-identical (docs/PIPELINE.md).
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,6 +33,16 @@ from ..core import hdb as hdb_mod
 from ..core import pairs as pairs_mod
 from . import components, matcher
 from .synthetic import Corpus
+
+
+def _sync(*vals) -> None:
+    """Block on device work so ``perf_counter`` windows attribute stage
+    time to the stage that did the work (the repro.analysis R004 hazard:
+    async dispatch bleeds matching time into partition time)."""
+    for v in vals:
+        for leaf in jax.tree_util.tree_leaves(v):
+            if isinstance(leaf, jax.Array):
+                leaf.block_until_ready()
 
 
 @dataclasses.dataclass
@@ -46,8 +64,12 @@ def dedup_corpus(corpus: Corpus,
                  match_cfg: matcher.MatcherConfig = matcher.MatcherConfig(),
                  pair_budget: int = 20_000_000,
                  blocker: str = "hdb",
-                 verbose: bool = False) -> DedupReport:
+                 verbose: bool = False,
+                 match_backend: str = "auto",
+                 cc_max_rounds: int = 64) -> DedupReport:
     n = corpus.num_records
+    backend = ("host" if match_backend == "host"
+               else matcher.resolve_match_backend(match_backend))
     t0 = time.perf_counter()
     keys, valid = blocks_mod.build_keys(corpus.columns, corpus.blocking)
     if blocker == "hdb":
@@ -59,21 +81,43 @@ def dedup_corpus(corpus: Corpus,
         raise ValueError(blocker)
     blk = pairs_mod.build_blocks(result)
     pset = pairs_mod.dedupe_pairs(blk, budget=pair_budget)
-    t1 = time.perf_counter()
     # feed the matcher the device pair buffer directly (no host round trip
     # of the pair list when the device dedupe path produced it)
     dev_a, dev_b = pset.pair_buffers()
-    matched = matcher.match_pairs(corpus.columns, dev_a, dev_b, match_cfg)
-    ma, mb = pset.a[matched], pset.b[matched]
-    t2 = time.perf_counter()
-    label = components.connected_components(n, ma, mb)
-    # canonical survivor = min record id per component == the label itself
-    survivors = np.unique(label)
+    _sync(dev_a, dev_b)
+    t1 = time.perf_counter()
+    if backend == "host":
+        # parity baseline: scores + matched mask land host-side, the
+        # matched pair list is gathered in numpy and re-uploaded for CC
+        matched = matcher.match_pairs(corpus.columns, dev_a, dev_b, match_cfg)
+        ma, mb = pset.a[matched], pset.b[matched]
+        num_matched = int(matched.sum())
+        t2 = time.perf_counter()
+        label = components.connected_components(n, ma, mb,
+                                                max_rounds=cc_max_rounds)
+        # canonical survivor = min record id per component == the label
+        survivors = np.unique(label)
+    else:
+        # fused path: matched pairs stay device-resident end to end —
+        # the compacted (0,0)-padded buffer flows straight into CC and
+        # only labels/survivors/counters ever cross to the host
+        ca, cb, cnt = matcher.match_compact(corpus.columns, dev_a, dev_b,
+                                            match_cfg, backend=backend)
+        _sync(ca, cb, cnt)
+        t2 = time.perf_counter()
+        label_d, surv_d, n_surv, converged, _ = components.cluster_pairs_device(
+            n, ca, cb, max_rounds=cc_max_rounds)
+        _sync(label_d, surv_d)
+        if not bool(np.asarray(converged)):
+            components._warn_truncated(cc_max_rounds)
+        num_matched = int(np.asarray(cnt))
+        label = np.asarray(label_d)[:n].astype(np.int64)
+        survivors = np.asarray(surv_d)[:int(np.asarray(n_surv))].astype(np.int64)
     t3 = time.perf_counter()
     return DedupReport(
         num_records=n,
         num_candidate_pairs=len(pset.a),
-        num_matched_pairs=int(matched.sum()),
+        num_matched_pairs=num_matched,
         num_components=len(survivors),
         num_survivors=len(survivors),
         blocking_seconds=t1 - t0,
@@ -95,11 +139,16 @@ class DedupPipeline:
     """
 
     def __init__(self, cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(max_block_size=100),
-                 match_cfg: matcher.MatcherConfig = matcher.MatcherConfig()):
+                 match_cfg: matcher.MatcherConfig = matcher.MatcherConfig(),
+                 match_backend: str = "auto",
+                 cc_max_rounds: int = 64):
         from ..streaming import BlockStore, DeltaBlocker  # local: optional dep cycle
         from ..streaming.engine import ColumnCache
         self.cfg = cfg
         self.match_cfg = match_cfg
+        self.match_backend = ("host" if match_backend == "host"
+                              else matcher.resolve_match_backend(match_backend))
+        self.cc_max_rounds = cc_max_rounds
         self.store = BlockStore(cfg)
         self.blocker = DeltaBlocker(self.store)
         self.blocking: Optional[Dict[str, blocks_mod.ColumnBlocking]] = None
@@ -108,6 +157,7 @@ class DedupPipeline:
         self._matched = np.zeros((0,), np.uint64)
 
     def extend(self, corpus_delta: Corpus) -> DedupReport:
+        from ..kernels.match import packed_host
         from ..streaming.store import pack_pair, searchsorted_mask, unpack_pair
         t0 = time.perf_counter()
         if self.blocking is None:
@@ -117,28 +167,49 @@ class DedupPipeline:
                               for name, col in corpus_delta.columns.items()})
         keys, valid = blocks_mod.build_keys(corpus_delta.columns, self.blocking)
         report = self.blocker.ingest_keys(np.asarray(keys), np.asarray(valid))
+        # ingest returns host arrays, so device work is already drained
+        # here; the explicit barrier keeps the stage windows honest if
+        # that ever changes (repro.analysis R004)
+        _sync(report)
         t1 = time.perf_counter()
         a, b, _ = report.pairs_added
         ra, rb = report.pairs_retracted
         if len(ra):
+            # retraction against the packed ledger: blocks dissolved by
+            # this delta withdraw their pairs before the union re-forms
             pos, hit = searchsorted_mask(self._matched, pack_pair(ra, rb))
             keep = np.ones(len(self._matched), bool)
             keep[pos[hit]] = False
             self._matched = self._matched[keep]
         if len(a):
             cols = self._columns.columns()
-            # pre-cast host-side then upload explicitly: dtype-coercing
-            # jnp.asarray is an implicit transfer (repro.analysis R001)
-            matched = matcher.match_pairs(
-                cols, jnp.asarray(np.asarray(a, np.int32)),
-                jnp.asarray(np.asarray(b, np.int32)), self.match_cfg)
-            new = pack_pair(a[matched], b[matched])
+            if self.match_backend == "host":
+                # pre-cast host-side then upload explicitly: dtype-coercing
+                # jnp.asarray is an implicit transfer (repro.analysis R001)
+                matched = matcher.match_pairs(
+                    cols, jnp.asarray(np.asarray(a, np.int32)),
+                    jnp.asarray(np.asarray(b, np.int32)), self.match_cfg)
+                new = pack_pair(a[matched], b[matched])
+            else:
+                # fused delta match: score+threshold+compact on device,
+                # pull only the packed matched words for the ledger
+                ca, cb, cnt = matcher.match_compact(
+                    cols, a, b, self.match_cfg, backend=self.match_backend)
+                _sync(ca, cb, cnt)
+                new = packed_host(ca, cb, int(np.asarray(cnt)))
             self._matched = np.union1d(self._matched, new)
         t2 = time.perf_counter()
         n = self.store.num_records
         ma, mb = unpack_pair(self._matched)
-        label = components.connected_components(n, ma, mb)
-        survivors = np.unique(label)
+        if self.match_backend == "host":
+            label = components.connected_components(
+                n, ma, mb, max_rounds=self.cc_max_rounds)
+            survivors = np.unique(label)
+        else:
+            # pow-2 bucketed device CC: bounded compiles as the union grows
+            cres = components.cluster_edges(
+                n, ma, mb, max_rounds=self.cc_max_rounds)
+            label, survivors = cres.label, cres.survivors
         t3 = time.perf_counter()
         return DedupReport(
             num_records=n,

@@ -1,0 +1,8 @@
+from .ops import (  # noqa: F401
+    compact_matched,
+    fused_match_pairs,
+    packed_host,
+    pair_jaccard_jnp,
+    score_lanes_jnp,
+)
+from .match import match_score_pallas  # noqa: F401

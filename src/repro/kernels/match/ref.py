@@ -1,0 +1,67 @@
+"""Numpy oracle for the fused match kernel (host-only, no JAX).
+
+Scoring replays the exact float32 op sequence of ``ops.score_lanes_jnp``
+(int32 intersections/unions, f32 true-divide, weight accumulation in
+config order) so the oracle threshold decision is bit-identical to the
+device paths, not merely close. Compaction is the trivially-correct
+form: boolean indexing, which the device prefix-sum scatter must equal.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def np_pair_jaccard(tok: np.ndarray, mask: np.ndarray, a: np.ndarray,
+                    b: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(jaccard f32, present bool) per pair — mirror of pair_jaccard_jnp."""
+    ta, ma = tok[a], mask[a]
+    tb, mb = tok[b], mask[b]
+    eq = (ta[:, :, None] == tb[:, None, :]) & ma[:, :, None] & mb[:, None, :]
+    inter = np.sum(np.any(eq, axis=2), axis=1).astype(np.int32)
+    na = np.sum(ma, axis=1).astype(np.int32)
+    nb = np.sum(mb, axis=1).astype(np.int32)
+    union = na + nb - inter
+    both = (na > 0) & (nb > 0)
+    # f32 true-divide, matching jnp's int32/int32 promotion
+    jac = inter.astype(np.float32) / np.maximum(union, 1).astype(np.float32)
+    return np.where(both, jac, np.float32(0.0)), both
+
+
+def np_score_pairs(tokens, masks, weights, a, b) -> np.ndarray:
+    """Weighted multi-column score, f32-exact vs the device paths."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    total = np.zeros(a.shape, np.float32)
+    norm = np.zeros(a.shape, np.float32)
+    for i, w in enumerate(weights):
+        j, present = np_pair_jaccard(np.asarray(tokens[i]),
+                                     np.asarray(masks[i]), a, b)
+        w32 = np.float32(w)
+        total = total + w32 * j
+        norm = norm + np.where(present, w32, np.float32(0.0))
+    return np.where(norm > 0,
+                    total / np.maximum(norm, np.float32(1e-6)),
+                    np.float32(0.0))
+
+
+def np_match_compact(tokens, masks, weights, a, b, *, threshold: float,
+                     out_len: int | None = None):
+    """Oracle for ``ops.fused_match_pairs``: (ca, cb, count) int32.
+
+    The compacted prefix holds matched pairs in candidate order; the
+    tail up to ``out_len`` is zeros — the same (0,0) no-op padding the
+    device scatter produces.
+    """
+    a = np.asarray(a, np.int32)
+    b = np.asarray(b, np.int32)
+    score = np_score_pairs(tokens, masks, weights, a, b)
+    matched = score >= np.float32(threshold)
+    count = int(matched.sum())
+    n = len(a) if out_len is None else int(out_len)
+    ca = np.zeros(n, np.int32)
+    cb = np.zeros(n, np.int32)
+    ca[:count] = a[matched]
+    cb[:count] = b[matched]
+    return ca, cb, count

@@ -41,8 +41,9 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from ..core import hdb as hdb_mod
+from ..data.components import ClusterResult, cluster_edges
 from ..streaming.delta import DeltaBlocker, IngestReport, QueryResult
-from ..streaming.store import BlockStore
+from ..streaming.store import BlockStore, unpack_pair
 from .buckets import BucketLadder, pad_probe_rows
 from .metrics import Metrics
 from .scheduler import collate_fifo, drain
@@ -128,6 +129,8 @@ class Tenant:
     blocker: DeltaBlocker
     read_q: List[ProbeRequest] = dataclasses.field(default_factory=list)
     write_q: List[IngestRequest] = dataclasses.field(default_factory=list)
+    # last refresh_clusters() outcome (None until first refresh)
+    clusters: Optional[ClusterResult] = None
 
 
 class DedupeService:
@@ -177,6 +180,33 @@ class DedupeService:
         """Existing tenant, or a fresh isolated store created on first use."""
         got = self._tenants.get(name)
         return got if got is not None else self.add_tenant(name)
+
+    def refresh_clusters(self, name: str,
+                         max_rounds: int = 64) -> ClusterResult:
+        """Re-partition a tenant's pair ledger into entity clusters.
+
+        Runs the fused device CC path (``components.cluster_edges``,
+        pow-2 bucketed uploads -> bounded ``while_loop`` -> device
+        survivor extraction) over the tenant store's exact packed
+        ``a<<32|b`` ledger. Service tenants ingest pre-hashed keys, so
+        this partitions the *candidate* graph — the blocking-level
+        clusters that upper-bound any downstream matcher. The result is
+        cached on the tenant and surfaced through ``snapshot()`` gauges;
+        a truncated (non-converged) refresh bumps
+        ``cluster_truncated_total`` — never silent.
+        """
+        t = self.tenant(name)
+        t0 = self._clock()
+        ma, mb = unpack_pair(np.asarray(t.store.led_pack, np.uint64))
+        res = cluster_edges(int(t.store.num_records), ma, mb,
+                            max_rounds=max_rounds)
+        t.clusters = res
+        self.metrics.counter("cluster_refreshes_total").inc()
+        if not res.converged:
+            self.metrics.counter("cluster_truncated_total").inc()
+        self.metrics.histogram("cluster_refresh_s").record(
+            self._clock() - t0)
+        return res
 
     # ------------------------------------------------------------------
     # admission
@@ -267,12 +297,17 @@ class DedupeService:
         (max shard count), ``store_shard_skew_max`` (worst max/mean
         per-shard byte skew; 1.0 == balanced), and the two never-silent
         fallback counters (routed ledger syncs and routed key-table
-        exchanges that dropped to the lossless host path).
+        exchanges that dropped to the lossless host path). Tenants that
+        have run ``refresh_clusters`` add ``clustered_tenants`` /
+        ``cluster_components`` / ``cluster_rounds_max`` gauges alongside
+        the ``cluster_refreshes_total`` / ``cluster_truncated_total``
+        counters.
         """
         depths = self.queue_depths()
         shards = 1
         skew = 1.0
         ledger_fb = exchange_fb = 0
+        clustered = cluster_components = cluster_rounds_max = 0
         for t in self._tenants.values():
             ledger_fb += getattr(t.blocker, "routed_fallback_total", 0)
             router = getattr(t.store, "router", None)
@@ -280,6 +315,11 @@ class DedupeService:
                 shards = max(shards, t.store.n_shards)
                 skew = max(skew, t.store.shard_skew())
                 exchange_fb += router.exchange_fallback_total
+            if t.clusters is not None:
+                clustered += 1
+                cluster_components += len(t.clusters.survivors)
+                cluster_rounds_max = max(cluster_rounds_max,
+                                         t.clusters.rounds)
         return self.metrics.snapshot(
             read_queue_depth=depths["read"],
             write_queue_depth=depths["write"],
@@ -287,7 +327,10 @@ class DedupeService:
             store_shards=shards,
             store_shard_skew_max=skew,
             ledger_routed_fallback_total=ledger_fb,
-            store_exchange_fallback_total=exchange_fb)
+            store_exchange_fallback_total=exchange_fb,
+            clustered_tenants=clustered,
+            cluster_components=cluster_components,
+            cluster_rounds_max=cluster_rounds_max)
 
     # ------------------------------------------------------------------
 

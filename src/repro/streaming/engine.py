@@ -137,6 +137,10 @@ class IngestResult:
     first_rid: int
     report: IngestReport
     match_scores: Optional[np.ndarray] = None   # scores of pairs_added
+    # fused match_backend only: packed a<<32|b words of the MATCHED new
+    # pairs (match_scores stays None — the full score vector never
+    # crosses to the host on that path)
+    matched_pairs: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -152,8 +156,16 @@ class StreamingEngine:
                  cfg: hdb_mod.HDBConfig = hdb_mod.HDBConfig(),
                  ingest_slots: int = 256, query_slots: int = 64,
                  matcher_cfg=None, sort_backend: str = "auto",
-                 n_shards: int = 1):
+                 n_shards: int = 1, match_backend: str = "host"):
         self.blocking = blocking
+        # "host" (default): score every new pair, scores land host-side
+        # (IngestResult.match_scores). "auto"/"jnp"/"pallas": the fused
+        # kernels/match path — only the packed matched pairs come back
+        # (IngestResult.matched_pairs).
+        if match_backend != "host":
+            from ..data.matcher import resolve_match_backend
+            match_backend = resolve_match_backend(match_backend)
+        self.match_backend = match_backend
         if n_shards > 1:
             from .shard import ShardedBlockStore
             self.store = ShardedBlockStore(cfg, n_shards=n_shards)
@@ -227,12 +239,15 @@ class StreamingEngine:
             first_rid = self.store.num_records
             keys, valid = self._build_keys(batch)
             report = self.blocker.ingest_keys(keys, valid)
-            scores = None
+            scores = matched = None
             if self.matcher_cfg is not None and report.num_pairs_added:
-                scores = self._score_new_pairs(report)
+                if self.match_backend == "host":
+                    scores = self._score_new_pairs(report)
+                else:
+                    matched = self._match_new_pairs(report)
             self.ingest_results.append(IngestResult(
                 uids=uids, first_rid=first_rid, report=report,
-                match_scores=scores))
+                match_scores=scores, matched_pairs=matched))
         queries = self._pad_batch(self._query_queue, self.query_slots)
         if queries:
             batch = self._merge_columns(queries)
@@ -278,3 +293,15 @@ class StreamingEngine:
             b = jnp.asarray(np.asarray(b, np.int32))
         return matcher.score_pairs(self.column_cache.columns(), a, b,
                                    self.matcher_cfg)
+
+    def _match_new_pairs(self, report: IngestReport) -> np.ndarray:
+        """Fused match over this ingest's new pairs: packed ``a<<32|b``
+        words of the matched subset — the per-pair score vector stays on
+        device (no host round trip of the pair list)."""
+        from ..data import matcher
+        from ..kernels.match import packed_host
+        a, b, _ = report.pairs_added
+        ca, cb, cnt = matcher.match_compact(
+            self.column_cache.columns(), a, b, self.matcher_cfg,
+            backend=self.match_backend)
+        return packed_host(ca, cb, int(np.asarray(cnt)))

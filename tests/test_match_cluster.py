@@ -1,0 +1,310 @@
+"""Fused match->filter->cluster: bit-identity, oracle, and bound tests.
+
+The contract under test (docs/PIPELINE.md): the fused device path
+(kernels/match + components.cluster_pairs_device) produces the SAME
+matched-pair set, component labels, and survivors as the host baseline —
+bit-identical, not approximately — and connected components agree with a
+numpy union-find oracle on arbitrary graphs. This module runs under
+``--transfer-guard`` (conftest.TRANSFER_GUARDED_MODULES): the whole
+match->cluster hot path must hold the no-implicit-transfer contract.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core import hdb
+from repro.data import components, matcher, pipeline, synthetic
+from repro.kernels.match import ops as match_ops
+from repro.kernels.match import ref as match_ref
+from repro.kernels.match import packed_host
+
+DEVICE_BACKENDS = ("jnp", "pallas")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic.generate(synthetic.SyntheticSpec(num_entities=150,
+                                                      seed=7))
+
+
+@pytest.fixture(scope="module")
+def hdb_cfg():
+    return hdb.HDBConfig(max_block_size=30, max_iterations=5,
+                         cms_width=1 << 12)
+
+
+def _random_pairs(corpus, seed, n_pairs=3000):
+    """Candidate mix: random pairs + true duplicate pairs (so a healthy
+    fraction actually clears the match threshold)."""
+    rng = np.random.default_rng(seed)
+    n = corpus.num_records
+    a = rng.integers(0, n, n_pairs // 2)
+    b = rng.integers(0, n, n_pairs // 2)
+    la, lb = corpus.labeled_pairs()
+    take = rng.integers(0, len(la), n_pairs - len(a))
+    a = np.concatenate([a, la[take]]).astype(np.int64)
+    b = np.concatenate([b, lb[take]]).astype(np.int64)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# connected components: union-find oracle + bounds
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_cc_matches_oracle_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    m = int(rng.integers(0, 400))
+    a = rng.integers(0, n, m)      # self-pairs occur naturally
+    b = rng.integers(0, n, m)
+    got = components.connected_components(n, a, b)
+    want = components.connected_components_oracle(n, a, b)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cc_empty_edges():
+    got = components.connected_components(17, np.zeros(0), np.zeros(0))
+    np.testing.assert_array_equal(got, np.arange(17))
+
+
+def test_cc_self_pairs_only():
+    idx = np.arange(9)
+    got = components.connected_components(9, idx, idx)
+    np.testing.assert_array_equal(got, np.arange(9))
+
+
+def test_cc_single_giant_component():
+    # a shuffled chain linking every node: one component labeled 0
+    n = 300
+    rng = np.random.default_rng(0)
+    order = rng.permutation(n)
+    a, b = order[:-1], order[1:]
+    got = components.connected_components(n, a, b)
+    np.testing.assert_array_equal(got, np.zeros(n, np.int64))
+    np.testing.assert_array_equal(
+        got, components.connected_components_oracle(n, a, b))
+
+
+def test_cc_max_rounds_is_enforced():
+    # a long path graph needs ~log2(n) doubling rounds; max_rounds=1
+    # cannot converge and must warn instead of silently truncating
+    n = 128
+    a, b = np.arange(n - 1), np.arange(1, n)
+    with pytest.warns(RuntimeWarning, match="max_rounds"):
+        components.connected_components(n, a, b, max_rounds=1)
+    # ...and the default bound converges silently on the same graph
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        got = components.connected_components(n, a, b)
+    np.testing.assert_array_equal(got, np.zeros(n, np.int64))
+
+
+def test_cluster_edges_matches_oracle_and_pads():
+    rng = np.random.default_rng(3)
+    n, m = 1500, 900         # edge count not a pow-2: exercises padding
+    a = rng.integers(0, n, m)
+    b = rng.integers(0, n, m)
+    res = components.cluster_edges(n, a, b)
+    want = components.connected_components_oracle(n, a, b)
+    np.testing.assert_array_equal(res.label, want)
+    np.testing.assert_array_equal(res.survivors, np.unique(want))
+    assert res.converged and res.rounds > 0
+    assert len(res.label) == n       # capacity padding cropped
+
+
+def test_cluster_edges_empty():
+    res = components.cluster_edges(11, np.zeros(0), np.zeros(0))
+    np.testing.assert_array_equal(res.label, np.arange(11))
+    np.testing.assert_array_equal(res.survivors, np.arange(11))
+    assert res.converged and res.rounds == 0
+
+
+def test_cluster_edges_truncation_warns_and_flags():
+    n = 256
+    a, b = np.arange(n - 1), np.arange(1, n)
+    with pytest.warns(RuntimeWarning, match="max_rounds"):
+        res = components.cluster_edges(n, a, b, max_rounds=1)
+    assert not res.converged
+
+
+# ---------------------------------------------------------------------------
+# fused match: kernel/mirror/oracle/host agreement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_match_compact_matches_host_baseline(corpus, backend):
+    a, b = _random_pairs(corpus, seed=11)
+    host = matcher.match_pairs(corpus.columns, a, b)
+    ca, cb, cnt = matcher.match_compact(corpus.columns, a, b,
+                                        backend=backend)
+    cnt = int(np.asarray(cnt))
+    assert cnt == int(host.sum())
+    # compaction is order-preserving: matched pairs in candidate order
+    np.testing.assert_array_equal(np.asarray(ca)[:cnt], a[host])
+    np.testing.assert_array_equal(np.asarray(cb)[:cnt], b[host])
+    # tail is (0, 0) padding
+    assert not np.asarray(ca)[cnt:].any()
+    assert not np.asarray(cb)[cnt:].any()
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_match_compact_matches_numpy_oracle(corpus, backend):
+    a, b = _random_pairs(corpus, seed=12, n_pairs=1100)
+    tokens, masks, weights = matcher._schema(corpus.columns,
+                                             matcher.MatcherConfig())
+    ca, cb, cnt = matcher.match_compact(corpus.columns, a, b,
+                                        backend=backend)
+    ra, rb, rcount = match_ref.np_match_compact(
+        [np.asarray(t) for t in tokens], [np.asarray(m) for m in masks],
+        weights, a, b, threshold=matcher.MatcherConfig().threshold,
+        out_len=len(np.asarray(ca)))
+    assert int(np.asarray(cnt)) == rcount
+    np.testing.assert_array_equal(np.asarray(ca), ra)
+    np.testing.assert_array_equal(np.asarray(cb), rb)
+
+
+def test_match_compact_multi_chunk(corpus):
+    # chunk smaller than the pair list: exercises the cross-chunk base
+    # cumsum in compact_matched and the tail-validity mask
+    a, b = _random_pairs(corpus, seed=13, n_pairs=3000)
+    host = matcher.match_pairs(corpus.columns, a, b)
+    ca, cb, cnt = matcher.match_compact(corpus.columns, a, b,
+                                        backend="jnp", chunk=1024)
+    cnt = int(np.asarray(cnt))
+    assert cnt == int(host.sum())
+    np.testing.assert_array_equal(np.asarray(ca)[:cnt], a[host])
+    np.testing.assert_array_equal(np.asarray(cb)[:cnt], b[host])
+
+
+def test_match_compact_empty(corpus):
+    ca, cb, cnt = matcher.match_compact(
+        corpus.columns, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    assert int(np.asarray(cnt)) == 0
+    assert np.asarray(ca).shape == (0,)
+
+
+def test_match_compact_accepts_device_buffers(corpus):
+    a, b = _random_pairs(corpus, seed=14, n_pairs=800)
+    da = jnp.asarray(np.asarray(a, np.int32))
+    db = jnp.asarray(np.asarray(b, np.int32))
+    ca, cb, cnt = matcher.match_compact(corpus.columns, da, db)
+    host = matcher.match_pairs(corpus.columns, a, b)
+    cnt = int(np.asarray(cnt))
+    np.testing.assert_array_equal(np.asarray(ca)[:cnt], a[host])
+    words = packed_host(ca, cb, cnt)
+    assert words.dtype == np.uint64
+    np.testing.assert_array_equal(
+        words, (np.asarray(a[host], np.uint64) << np.uint64(32))
+        | np.asarray(b[host], np.uint64))
+
+
+def test_match_compact_rejects_host_backend(corpus):
+    with pytest.raises(ValueError, match="host"):
+        matcher.match_compact(corpus.columns, np.zeros(1, np.int64),
+                              np.zeros(1, np.int64), backend="host")
+    with pytest.raises(ValueError, match="match_backend"):
+        matcher.match_compact(corpus.columns, np.zeros(1, np.int64),
+                              np.zeros(1, np.int64), backend="bogus")
+
+
+def test_oracle_scores_bit_identical_to_host(corpus):
+    # the ref.py f32 op sequence must reproduce device scores exactly
+    a, b = _random_pairs(corpus, seed=15, n_pairs=900)
+    tokens, masks, weights = matcher._schema(corpus.columns,
+                                             matcher.MatcherConfig())
+    got = match_ref.np_score_pairs(
+        [np.asarray(t) for t in tokens], [np.asarray(m) for m in masks],
+        weights, a, b)
+    want = matcher.score_pairs(corpus.columns, a, b)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit-identity: dedup_corpus and DedupPipeline.extend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_dedup_corpus_fused_matches_host(corpus, hdb_cfg, backend):
+    host = pipeline.dedup_corpus(corpus, hdb_cfg, match_backend="host")
+    fused = pipeline.dedup_corpus(corpus, hdb_cfg, match_backend=backend)
+    assert fused.num_candidate_pairs == host.num_candidate_pairs
+    assert fused.num_matched_pairs == host.num_matched_pairs
+    assert fused.num_components == host.num_components
+    np.testing.assert_array_equal(fused.component_of, host.component_of)
+    np.testing.assert_array_equal(fused.survivors, host.survivors)
+    # labels agree with the union-find oracle on the matched graph
+    dev_label = components.connected_components_oracle(
+        corpus.num_records, *_matched_edges(corpus, hdb_cfg))
+    np.testing.assert_array_equal(fused.component_of, dev_label)
+
+
+def _matched_edges(corpus, cfg):
+    from repro.core import blocks as blocks_mod
+    from repro.core import pairs as pairs_mod
+    keys, valid = blocks_mod.build_keys(corpus.columns, corpus.blocking)
+    result = hdb.hashed_dynamic_blocking(keys, valid, cfg)
+    pset = pairs_mod.dedupe_pairs(pairs_mod.build_blocks(result))
+    matched = matcher.match_pairs(corpus.columns, *pset.pair_buffers())
+    return pset.a[matched], pset.b[matched]
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_pipeline_extend_fused_matches_host(corpus, hdb_cfg, backend):
+    n = corpus.num_records
+    rng = np.random.default_rng(21)
+    cuts = np.sort(rng.choice(np.arange(1, n), 2, replace=False))
+    pipe_h = pipeline.DedupPipeline(hdb_cfg, match_backend="host")
+    pipe_f = pipeline.DedupPipeline(hdb_cfg, match_backend=backend)
+    for part in np.split(np.arange(n), cuts):
+        delta = synthetic.corpus_slice(corpus, part)
+        rh = pipe_h.extend(delta)
+        rf = pipe_f.extend(delta)
+        assert rf.num_matched_pairs == rh.num_matched_pairs
+        np.testing.assert_array_equal(rf.component_of, rh.component_of)
+        np.testing.assert_array_equal(rf.survivors, rh.survivors)
+        # the packed matched-pair ledgers agree word for word
+        np.testing.assert_array_equal(pipe_f._matched, pipe_h._matched)
+    # ...and the final streaming state matches the batch run
+    batch = pipeline.dedup_corpus(corpus, hdb_cfg, match_backend=backend)
+    assert rf.num_matched_pairs == batch.num_matched_pairs
+    np.testing.assert_array_equal(rf.component_of, batch.component_of)
+
+
+def test_dedup_corpus_rejects_bad_backend(corpus, hdb_cfg):
+    with pytest.raises(ValueError, match="match_backend"):
+        pipeline.dedup_corpus(corpus, hdb_cfg, match_backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# compaction combiner unit: jnp path == kernel tile semantics
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_compact_matched_prefix_scatter(seed):
+    rng = np.random.default_rng(seed)
+    n = 4 * 128
+    aa = rng.integers(0, 1000, n).astype(np.int32)
+    bb = rng.integers(0, 1000, n).astype(np.int32)
+    matched = rng.random(n) < rng.random()    # varying density
+    m2 = matched.reshape(-1, 128).astype(np.int32)
+    rank = (np.cumsum(m2, axis=1) - m2).reshape(-1)
+    counts = m2.sum(axis=1)
+    ca, cb, cnt = match_ops.compact_matched(
+        jnp.asarray(aa), jnp.asarray(bb), jnp.asarray(matched),
+        jnp.asarray(rank.astype(np.int32)),
+        jnp.asarray(counts.astype(np.int32)))
+    cnt = int(np.asarray(cnt))
+    assert cnt == int(matched.sum())
+    np.testing.assert_array_equal(np.asarray(ca)[:cnt], aa[matched])
+    np.testing.assert_array_equal(np.asarray(cb)[:cnt], bb[matched])
+    assert not np.asarray(ca)[cnt:].any()
